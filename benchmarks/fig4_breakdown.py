@@ -1,0 +1,80 @@
+"""Paper Fig. 4: percentage computation time of the four AccurateML map-task
+parts (LSH grouping, information aggregation, initial output, refinement)
+relative to a basic map task."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, knn_data, timeit, K_DEFAULT
+from repro.apps import knn
+from repro.core import aggregate as agg_lib
+from repro.core import lsh as lsh_lib
+from repro.core import refine as refine_lib
+
+
+def run():
+    train_x, train_y, test_x, _ = knn_data()
+    n = train_x.shape[0]
+
+    t_basic = timeit(
+        lambda: knn.exact_map(train_x, train_y, test_x, k=K_DEFAULT)
+    )
+
+    for ratio in (10.0, 20.0, 100.0):
+        cfg = lsh_lib.config_for_compression(n, ratio)
+        params = lsh_lib.init_lsh(jax.random.PRNGKey(1), train_x.shape[1],
+                                  cfg)
+        ids = lsh_lib.bucket_ids(train_x, params)
+
+        t_lsh = timeit(lambda: lsh_lib.bucket_ids(train_x, params))
+        t_agg = timeit(
+            lambda: agg_lib.aggregate_by_bucket(
+                train_x, ids, cfg.n_buckets
+            ).means
+        )
+        knn_agg = knn.build_knn_aggregates(train_x, train_y, params, 10)
+        t_stage1 = timeit(
+            lambda: knn.accurateml_map(
+                train_x, train_y, knn_agg, test_x, k=K_DEFAULT,
+                refine_budget=0,
+            )
+        )
+        eps = 0.05
+        budget = refine_lib.eps_to_budget(n, eps)
+        t_full = timeit(
+            lambda: knn.accurateml_map(
+                train_x, train_y, knn_agg, test_x, k=K_DEFAULT,
+                refine_budget=budget,
+            )
+        )
+        t_refine = max(t_full - t_stage1, 0.0)
+        pct = lambda t: 100.0 * t / t_basic
+        emit(
+            f"fig4_breakdown_wall_r{int(ratio)}",
+            t_full * 1e6,
+            f"lsh%={pct(t_lsh):.2f};agg%={pct(t_agg):.2f};"
+            f"initial%={pct(t_stage1):.2f};refine%={pct(t_refine):.2f};"
+            f"total%={pct(t_full + t_lsh + t_agg):.2f}",
+        )
+        # Work-model percentages (points-touched x feature ops — the
+        # quantity that transfers to the TPU roofline; single-core wall
+        # clock over-weights the gather-heavy stages at toy scale):
+        q, d = test_x.shape[0], train_x.shape[1]
+        w_basic = n * d * q
+        w_lsh = n * d * cfg.n_hashes
+        w_agg = n * d
+        w_init = (n / ratio) * d * q
+        w_ref = eps * n * d * q
+        wp = lambda w: 100.0 * w / w_basic
+        emit(
+            f"fig4_breakdown_work_r{int(ratio)}",
+            0.0,
+            f"lsh%={wp(w_lsh):.2f};agg%={wp(w_agg):.2f};"
+            f"initial%={wp(w_init):.2f};refine%={wp(w_ref):.2f};"
+            f"total%={wp(w_lsh + w_agg + w_init + w_ref):.2f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Paper Fig. 5: percentage shuffle cost of AccurateML CF jobs vs the basic
+job (map output ∝ emitted neighbourhood size)."""
+from __future__ import annotations
+
+from benchmarks.common import CF_ACTIVE, CF_ITEMS, CF_USERS, emit
+from repro.apps import cf
+
+
+def run():
+    full = cf.shuffle_bytes_exact(CF_USERS, CF_ITEMS, CF_ACTIVE)
+    for ratio in (10.0, 20.0, 100.0):
+        for eps in (0.01, 0.05, 0.1):
+            b = cf.shuffle_bytes_accurateml(
+                CF_USERS, CF_ITEMS, CF_ACTIVE, ratio, eps
+            )
+            emit(
+                f"fig5_shuffle_r{int(ratio)}_eps{eps}",
+                0.0,
+                f"shuffle%={100.0 * b / full:.2f}",
+            )
+
+
+if __name__ == "__main__":
+    run()

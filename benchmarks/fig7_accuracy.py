@@ -1,0 +1,46 @@
+"""Paper Fig. 7: percentage accuracy loss of AccurateML results across
+(compression ratio, refinement threshold) for both workloads."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import K_DEFAULT, N_SHARDS, cf_data, emit, knn_data
+from repro.apps import cf, knn
+
+
+def run():
+    tx, ty, qx, qy = knn_data()
+    exact = knn.run_exact(tx, ty, qx, k=K_DEFAULT, n_classes=10,
+                          n_shards=N_SHARDS)
+    acc_exact = knn.accuracy(exact, qy)
+    for ratio in (10.0, 20.0, 100.0):
+        for eps in (0.01, 0.05, 0.1):
+            pred = knn.run_accurateml(
+                tx, ty, qx, k=K_DEFAULT, n_classes=10,
+                compression_ratio=ratio, eps_max=eps,
+                lsh_key=jax.random.PRNGKey(7), n_shards=N_SHARDS,
+            )
+            loss = knn.accuracy_loss(acc_exact, knn.accuracy(pred, qy))
+            emit(
+                f"fig7_knn_r{int(ratio)}_eps{eps}", 0.0,
+                f"accuracy_loss%={100 * loss:.2f}",
+            )
+
+    nr, nm, a, am, truth, tmask = cf_data()
+    exact = cf.run_exact(nr, nm, a, am, n_shards=N_SHARDS)
+    rmse_exact = cf.rmse(exact, truth, tmask)
+    for ratio in (10.0, 20.0, 100.0):
+        for eps in (0.01, 0.05, 0.1):
+            pred = cf.run_accurateml(
+                nr, nm, a, am, compression_ratio=ratio, eps_max=eps,
+                lsh_key=jax.random.PRNGKey(9), n_shards=N_SHARDS,
+            )
+            loss = cf.rmse_loss(rmse_exact, cf.rmse(pred, truth, tmask))
+            emit(
+                f"fig7_cf_r{int(ratio)}_eps{eps}", 0.0,
+                f"accuracy_loss%={100 * loss:.2f}",
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,162 @@
+"""Roofline analysis (deliverable g): three-term model per (arch x shape x
+mesh) cell, derived from the dry-run's compiled artifacts.
+
+  compute    = HLO_FLOPs(per-partition)  / 197 TFLOP/s (bf16, v5e chip)
+  memory     = HLO bytes accessed        / 819 GB/s HBM
+  collective = ring link-bytes           / 50 GB/s per ICI link
+
+cost_analysis() reports the per-partition SPMD module, so terms are
+per-chip by construction; link-bytes come from the replica-group-aware HLO
+census in launch/dryrun.py.  MODEL_FLOPS uses 6·N·D (train), 2·N·D
+(prefill) and 2·N·B (decode, one token/seq) with N = active params.
+
+Outputs the markdown table consumed by EXPERIMENTS.md §Roofline and one
+CSV line per cell.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+CALIB = Path(__file__).resolve().parents[1] / "results" / "calib"
+OUT_MD = Path(__file__).resolve().parents[1] / "results" / "roofline.md"
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+
+_ADVICE = {
+    "compute": ("raise MXU utilization: larger per-chip tiles, fuse "
+                "elementwise chains, drop fp32 casts in the hot path"),
+    "memory": ("cut HBM traffic: better fusion/layout, wider blocks per "
+               "pass, quantize weights/cache, avoid remat re-reads"),
+    "collective": ("cut link bytes: reshard to reduce gather/scatter "
+                   "volume, overlap collectives with compute, compress "
+                   "or batch messages"),
+}
+
+
+def load_cells():
+    cells = []
+    for f in sorted(RESULTS.glob("*.json")):
+        c = json.loads(f.read_text())
+        c["_stem"] = f.stem         # arch__shape__mesh[__variant]
+        cells.append(c)
+    return cells
+
+
+def model_flops(cell) -> float:
+    n = cell["active_params"]
+    if cell["kind"] == "train":
+        return 6.0 * n * cell["tokens"]
+    if cell["kind"] == "prefill":
+        return 2.0 * n * cell["tokens"]
+    # decode: one new token per sequence in the batch
+    return 2.0 * n * _decode_batch(cell)
+
+
+def _decode_batch(cell) -> int:
+    shape = cell["shape"]
+    return {"decode_32k": 128, "long_500k": 1}.get(shape, 1)
+
+
+def n_chips(cell) -> int:
+    return 512 if cell["mesh"] == "2x16x16" else 256
+
+
+def _calibrated(cell) -> dict | None:
+    """Depth-corrected per-chip metrics.
+
+    XLA's cost analysis counts a scan's while body ONCE; the calibration
+    pass (launch/dryrun.py --calibrate) lowers each cell UNROLLED at depths
+    1 and 2, giving exact (base, per-unit) metrics:  corrected = base +
+    per_unit * effective_units.  Calibration runs on the single-pod mesh;
+    per-unit collective structure transfers to multi-pod (the in-loop
+    collectives are model-axis groups of 16 in both meshes).
+    """
+    stem = cell.get("_stem", "")
+    variant = "__opt" if stem.endswith("__opt") else ""
+    f = CALIB / f"{cell['arch']}__{cell['shape']}__single{variant}.json"
+    if not f.exists():
+        return None
+    c = json.loads(f.read_text())
+    units = c["effective_units"]
+    out = {}
+    for k in ("flops", "bytes", "link_bytes"):
+        out[k] = max(c["base"][k] + c["per_unit"][k] * units, 0.0)
+    return out
+
+
+def analyze(cell) -> dict:
+    calib = _calibrated(cell)
+    if calib is not None:
+        flops = calib["flops"]
+        membytes = calib["bytes"]
+        link = calib["link_bytes"]
+    else:
+        flops = cell["cost"].get("flops", 0.0)
+        membytes = cell["cost"].get("bytes accessed", 0.0)
+        link = cell["collectives"].get(
+            "total_link", cell["collectives"].get("total", 0)
+        )
+    t_c = flops / PEAK_FLOPS
+    t_m = membytes / HBM_BW
+    t_x = link / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(cell)
+    per_chip_mf = mf / n_chips(cell)
+    useful = per_chip_mf / flops if flops else 0.0
+    bound = max(t_c, t_m, t_x)
+    # roofline fraction: useful model flops per chip over the bound's
+    # equivalent compute capacity
+    frac = (per_chip_mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    opt = cell.get("_stem", "").endswith("__opt")
+    return {
+        "arch": cell["arch"] + (" [opt]" if opt else ""),
+        "shape": cell["shape"], "mesh": cell["mesh"],
+        "agg": cell.get("agg_kv", False),
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dom, "model_flops": mf,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "calibrated": calib is not None,
+        "advice": _ADVICE[dom],
+    }
+
+
+def run(print_csv: bool = True, write_md: bool = True):
+    rows = [analyze(c) for c in load_cells()]
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    if write_md:
+        lines = [
+            "| arch | shape | mesh | compute s | memory s | collective s "
+            "| dominant | useful-FLOP ratio | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|",
+        ]
+        for r in rows:
+            lines.append(
+                f"| {r['arch']}{' [agg]' if r['agg'] else ''} | {r['shape']} "
+                f"| {r['mesh']} | {r['t_compute_s']:.3e} "
+                f"| {r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} "
+                f"| **{r['dominant']}** | {r['useful_flops_ratio']:.2f} "
+                f"| {r['roofline_fraction']:.3f} |"
+            )
+        OUT_MD.parent.mkdir(parents=True, exist_ok=True)
+        OUT_MD.write_text("\n".join(lines) + "\n")
+    if print_csv:
+        for r in rows:
+            bound = max(r["t_compute_s"], r["t_memory_s"],
+                        r["t_collective_s"])
+            print(
+                f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},"
+                f"{bound * 1e6:.1f},"
+                f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f};"
+                f"useful={r['useful_flops_ratio']:.2f}"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Benchmark driver: one benchmark per paper figure + the roofline table.
+
+Prints ``name,us_per_call,derived`` CSV lines (the contract for
+bench_output.txt).  Paper-figure benches run scaled-down live workloads;
+the roofline bench consumes the dry-run artifacts in results/dryrun/.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        fig4_breakdown, fig5_shuffle, fig6_time_reduction, fig7_accuracy,
+        fig8_vs_sampling, fig9_k_sweep, roofline,
+    )
+
+    ok = True
+    for mod in (fig4_breakdown, fig5_shuffle, fig6_time_reduction,
+                fig7_accuracy, fig8_vs_sampling, fig9_k_sweep):
+        try:
+            mod.run()
+        except Exception:  # keep the harness going, report at the end
+            ok = False
+            print(f"BENCH_FAIL,{mod.__name__}", file=sys.stderr)
+            traceback.print_exc()
+
+    try:
+        roofline.run()
+    except Exception:
+        ok = False
+        print("BENCH_FAIL,roofline", file=sys.stderr)
+        traceback.print_exc()
+
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

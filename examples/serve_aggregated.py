@@ -1,0 +1,77 @@
+"""Serving demo: batched decode with the paper's aggregated-KV attention.
+
+Builds a small dense LM, prefills a context token-by-token, then decodes
+with (a) exact attention and (b) AccurateML aggregated-KV attention at
+several (compression, refine_frac) settings — reporting agreement with the
+exact path and the per-token attention cost model O(K + eps*S) vs O(S).
+
+    PYTHONPATH=src python examples/serve_aggregated.py --context 96
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init_caches, init_params, serve_step
+
+
+def decode(cfg, params, tokens, s_max):
+    b = tokens.shape[0]
+    caches = init_caches(jax.random.PRNGKey(9), cfg, batch=b, s_max=s_max)
+    pos = jnp.zeros((b,), jnp.int32)
+    step = jax.jit(
+        lambda p, c, t, q: serve_step(p, c, t, q, cfg)
+    )
+    logits = None
+    t0 = time.perf_counter()
+    for i in range(tokens.shape[1]):
+        logits, caches = step(params, caches, tokens[:, i:i+1], pos)
+        pos = pos + 1
+    jax.block_until_ready(logits)
+    return logits, time.perf_counter() - t0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--context", type=int, default=96)
+    args = ap.parse_args()
+
+    base = get_config(args.arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, base)
+    tokens = jax.random.randint(
+        jax.random.fold_in(key, 1), (args.batch, args.context), 0,
+        base.vocab_size,
+    )
+    s_max = args.context + 8
+
+    exact_logits, t_exact = decode(base, params, tokens, s_max)
+    exact_top = jnp.argmax(exact_logits, -1)
+    print(f"exact decode:   {t_exact*1e3:7.0f}ms  "
+          f"(attention reads {args.context} tokens/step)")
+
+    for comp, frac in ((4, 0.5), (4, 0.25), (8, 0.25)):
+        cfg = base.with_(
+            agg_kv=True, agg_compression=comp, agg_refine_frac=frac
+        )
+        logits, t = decode(cfg, params, tokens, s_max)
+        top = jnp.argmax(logits, -1)
+        agree = float(jnp.mean((top == exact_top).astype(jnp.float32)))
+        k_buckets = s_max // comp
+        touched = k_buckets + frac * args.context
+        print(
+            f"agg r={comp} eps={frac:4.2f}: {t*1e3:7.0f}ms  "
+            f"top1-agreement={agree:.2f}  "
+            f"attention reads ~{touched:.0f}/{args.context} "
+            f"token-equivalents/step"
+        )
+    print("\n(at 500k context on TPU the read ratio is what dominates "
+          "decode latency: O(K + eps*S) vs O(S); see EXPERIMENTS.md)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""End-to-end training driver: data pipeline -> sharded train step ->
+checkpointing -> fault-tolerant supervisor loop.
+
+Default trains a ~25M-parameter qwen3-family model for 150 steps on CPU
+(scale --d-model/--layers/--steps up on real hardware; the same driver
+lowers unchanged onto the pod meshes).  Demonstrates:
+
+  * deterministic resumable TokenPipeline,
+  * AdamW + cosine schedule (+ optional top-k gradient compression),
+  * atomic checkpoints every --save-every steps + restart recovery,
+  * optional injected node failure to exercise the recovery path.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 150
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.data.pipeline import TokenPipeline
+from repro.launch.train import make_train_step
+from repro.models import init_params
+from repro.runtime import FailureInjector, Supervisor
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--heads", type=int, default=8)
+    ap.add_argument("--kv-heads", type=int, default=4)
+    ap.add_argument("--d-ff", type=int, default=1024)
+    ap.add_argument("--vocab", type=int, default=4096)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--grad-compress", type=float, default=0.0,
+                    help="top-k fraction (0 = off)")
+    ap.add_argument("--inject-failure-step", type=int, default=-1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True).with_(
+        d_model=args.d_model, n_layers=args.layers, n_heads=args.heads,
+        n_kv_heads=args.kv_heads, d_ff=args.d_ff, vocab_size=args.vocab,
+        head_dim=args.d_model // args.heads, dtype="float32",
+    )
+    from repro.configs.base import param_count
+    print(f"arch={cfg.name} params~{param_count(cfg)/1e6:.1f}M "
+          f"tokens/step={args.batch * args.seq}")
+
+    opt_cfg = optim.AdamWConfig(
+        lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+        total_steps=args.steps, weight_decay=0.01,
+    )
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    opt_state = optim.init_state(params)
+    pipe = TokenPipeline(cfg, global_batch=args.batch, seq_len=args.seq)
+
+    use_gc = args.grad_compress > 0.0
+    step_raw = make_train_step(
+        cfg, opt_cfg, grad_compress_frac=args.grad_compress
+    )
+    step_jit = jax.jit(step_raw)
+
+    state = {
+        "params": params,
+        "opt": opt_state,
+        "loss": jnp.asarray(0.0),
+    }
+    if use_gc:
+        state["ef"] = optim.init_error_feedback(params)
+
+    losses = []
+    t_start = time.perf_counter()
+
+    def step_fn(state, step):
+        batch = pipe.batch_at(step)
+        if use_gc:
+            p, o, ef, metrics = step_jit(
+                state["params"], state["opt"], state["ef"], batch
+            )
+            new = {"params": p, "opt": o, "ef": ef,
+                   "loss": metrics["loss"]}
+        else:
+            p, o, metrics = step_jit(state["params"], state["opt"], batch)
+            new = {"params": p, "opt": o, "loss": metrics["loss"]}
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % 10 == 0:
+            dt = time.perf_counter() - t_start
+            print(f"step {step:4d}  loss {loss:.4f}  ({dt:.1f}s)")
+        return new
+
+    ck = Checkpointer(args.ckpt_dir)
+    inject = (
+        FailureInjector({args.inject_failure_step: "node_failure"})
+        if args.inject_failure_step >= 0 else FailureInjector()
+    )
+    sup = Supervisor(ck, save_every=args.save_every, injector=inject)
+    state, report = sup.run(
+        state, step_fn, num_steps=args.steps, state_template=state,
+    )
+    print(f"done: first-10-avg loss {sum(losses[:10])/10:.4f} -> "
+          f"last-10-avg {sum(losses[-10:])/10:.4f}; report={report}")
+
+
+if __name__ == "__main__":
+    main()

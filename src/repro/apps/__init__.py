@@ -1,0 +1,1 @@
+"""Paper applications: kNN classification and CF-based recommendation."""

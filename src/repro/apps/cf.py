@@ -1,0 +1,300 @@
+"""User-based CF recommendation on the MapReduce engine (paper §III-D app 2).
+
+Map shards hold disjoint user rows of the rating matrix.  For a batch of
+active users, a map task computes Pearson weights against its users and
+emits neighbourhood contributions; the reduce stage combines them into
+
+    p(u,i) = r̄_u + Σ_v w(u,v)(r_vi − r̄_v) / Σ_v |w(u,v)| m_vi .
+
+AccurateML's aggregation for CF stores, per LSH bucket g of users:
+
+    sr_g[i] = Σ_{v∈g} m_vi r_vi          (raw rating sums -> centroid profile)
+    s_g[i]  = Σ_{v∈g} m_vi (r_vi − r̄_v)  (centred sums -> numerator surrogate)
+    c_g[i]  = Σ_{v∈g} m_vi               (rater counts -> denominator surrogate)
+
+so a bucket's *entire* contribution is reconstructed from one centroid weight
+(w(u, centroid_g) · s_g / |w| · c_g) — information from all users retained,
+unlike sampling which discards rows.  Stage 2 replaces the top-correlated
+buckets' surrogate with exact per-user terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregate as agg_lib
+from repro.core import correlation as corr_lib
+from repro.core import lsh as lsh_lib
+from repro.core import refine as refine_lib
+from repro.kernels import ops as kernel_ops
+
+
+def user_means(ratings: jax.Array, mask: jax.Array) -> jax.Array:
+    """Per-user mean over rated items. [U,I],[U,I] -> [U,1]."""
+    return jnp.sum(ratings * mask, axis=1, keepdims=True) / jnp.maximum(
+        jnp.sum(mask, axis=1, keepdims=True), 1.0
+    )
+
+
+# Significance weighting (Herlocker-style): weights from few co-rated items
+# are unreliable; shrink by co/(co + SHRINK).  Applied identically to every
+# processing path so the exact/approximate comparison stays fair.
+SHRINK = 8.0
+
+
+def shrink_weights(w: jax.Array, co_counts: jax.Array) -> jax.Array:
+    return w * (co_counts / (co_counts + SHRINK))
+
+
+# ---------------------------------------------------------------------------
+# exact + sampled map tasks
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def exact_map(ratings, mask, active, active_mask):
+    """Basic map task: Pearson weights vs all shard users; partial sums.
+
+    Returns (num [Q,I], den [Q,I]) — the shard's neighbourhood contribution.
+    """
+    w = kernel_ops.cf_weights(active, active_mask, ratings, mask)  # [Q,U]
+    co = active_mask @ mask.T                                      # [Q,U]
+    w = shrink_weights(w, co)
+    centred = (ratings - user_means(ratings, mask)) * mask
+    num = w @ centred
+    den = jnp.abs(w) @ mask
+    return num, den
+
+
+@partial(jax.jit, static_argnames=("n_sample",))
+def sampled_map(ratings, mask, active, active_mask, sample_idx, *, n_sample):
+    """Prior art: uniform subset of users."""
+    sub_r = ratings[sample_idx[:n_sample]]
+    sub_m = mask[sample_idx[:n_sample]]
+    return exact_map(sub_r, sub_m, active, active_mask)
+
+
+# ---------------------------------------------------------------------------
+# AccurateML aggregation + two-stage map task
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CFAggregates:
+    agg: agg_lib.AggregatedData   # index over users (perm/offsets/bucket_of)
+    profile: jax.Array            # [K,I] centroid rating profile sr/c
+    profile_mask: jax.Array       # [K,I] 1 where any bucket user rated i
+    s: jax.Array                  # [K,I] centred sums
+    c: jax.Array                  # [K,I] rater counts
+
+    def tree_flatten(self):
+        return (self.agg, self.profile, self.profile_mask, self.s, self.c), None
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+
+@partial(jax.jit, static_argnames=("n_buckets",))
+def _build_cf_aggregates(ratings, mask, ids, n_buckets):
+    means = user_means(ratings, mask)
+    centred = (ratings - means) * mask
+    sr = jax.ops.segment_sum(ratings * mask, ids, num_segments=n_buckets)
+    s = jax.ops.segment_sum(centred, ids, num_segments=n_buckets)
+    c = jax.ops.segment_sum(mask, ids, num_segments=n_buckets)
+    counts = jax.ops.segment_sum(
+        jnp.ones((ratings.shape[0],), jnp.int32), ids, num_segments=n_buckets
+    )
+    profile = sr / jnp.maximum(c, 1.0)
+    profile_mask = (c > 0).astype(ratings.dtype)
+
+    perm = jnp.argsort(ids, stable=True).astype(jnp.int32)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)]
+    )
+    agg = agg_lib.AggregatedData(
+        means=profile, counts=counts, perm=perm, offsets=offsets,
+        bucket_of=ids.astype(jnp.int32),
+    )
+    return CFAggregates(
+        agg=agg, profile=profile, profile_mask=profile_mask, s=s, c=c
+    )
+
+
+def build_cf_aggregates(
+    ratings: jax.Array, mask: jax.Array, params: lsh_lib.LSHParams
+) -> CFAggregates:
+    """LSH-bucket users by centred rating profile; aggregate (§III-B)."""
+    centred = (ratings - user_means(ratings, mask)) * mask
+    ids = lsh_lib.bucket_ids(centred, params)
+    return _build_cf_aggregates(ratings, mask, ids, params.config.n_buckets)
+
+
+@partial(jax.jit, static_argnames=("refine_budget",))
+def accurateml_map(
+    ratings, mask, cf_agg: CFAggregates, active, active_mask,
+    *, refine_budget: int,
+):
+    """Algorithm 1 for CF.  Correlation of bucket g for active user q is
+    |w(q, centroid_g)| (paper: the weight to the aggregated user); each
+    active user ranks and refines its own buckets (per-query Alg. 1)."""
+    agg = cf_agg.agg
+    # ---- stage 1: centroid weights + surrogate contribution ----
+    w_g = kernel_ops.cf_weights(
+        active, active_mask, cf_agg.profile, cf_agg.profile_mask
+    )                                                    # [Q,K]
+    co_g = active_mask @ cf_agg.profile_mask.T
+    w_g = shrink_weights(w_g, co_g)
+    w_g = jnp.where(agg.counts[None, :] > 0, w_g, 0.0)
+    num = w_g @ cf_agg.s                                 # [Q,I]
+    den = jnp.abs(w_g) @ cf_agg.c
+
+    if refine_budget <= 0:
+        return num, den
+
+    # ---- stage 2: per-query replacement of top buckets by exact users ----
+    corr = jnp.abs(w_g)                                  # [Q,K]
+    rankings = corr_lib.rank_buckets_multi(corr, agg.counts)
+    idx, valid = jax.vmap(
+        lambda r: agg_lib.refinement_indices(agg, r, refine_budget)
+    )(rankings)                                          # [Q,B] x2
+    covered = jax.vmap(
+        lambda r: agg_lib.buckets_fully_covered(agg, r, refine_budget)
+    )(rankings)                                          # [Q,K]
+    covered = covered & (agg.counts[None, :] > 0)
+
+    # Exact sums must not double-count: only users of fully covered buckets
+    # (per query) replace their bucket's surrogate.
+    use = valid & jnp.take_along_axis(
+        covered, agg.bucket_of[idx], axis=1
+    )                                                    # [Q,B]
+    centred_all = (ratings - user_means(ratings, mask)) * mask
+    ref_r = ratings[idx]                                 # [Q,B,I]
+    ref_m = mask[idx] * use[..., None]
+    ref_c = centred_all[idx] * use[..., None]
+
+    af = active.astype(jnp.float32)
+    am = active_mask.astype(jnp.float32)
+    a_mean = jnp.sum(af * am, axis=1, keepdims=True) / jnp.maximum(
+        jnp.sum(am, axis=1, keepdims=True), 1.0
+    )
+    ac = (af - a_mean) * am                              # [Q,I]
+
+    w_num = jnp.einsum("qi,qbi->qb", ac, ref_c)
+    a_sq = jnp.einsum("qi,qbi->qb", ac * ac, ref_m)
+    u_sq = jnp.einsum("qi,qbi->qb", am, ref_c * ref_c)
+    w_ref = w_num / jnp.sqrt(jnp.maximum(a_sq * u_sq, 1e-12))
+    co_ref = jnp.einsum("qi,qbi->qb", am, ref_m)
+    w_ref = shrink_weights(w_ref, co_ref)
+    w_ref = jnp.where(use, w_ref, 0.0)                   # [Q,B]
+
+    # Subtract the covered buckets' surrogate, add their exact terms.
+    w_g_cov = jnp.where(covered, w_g, 0.0)
+    num = num - w_g_cov @ cf_agg.s + jnp.einsum("qb,qbi->qi", w_ref, ref_c)
+    den = (
+        den - jnp.abs(w_g_cov) @ cf_agg.c
+        + jnp.einsum("qb,qbi->qi", jnp.abs(w_ref), ref_m)
+    )
+    return num, den
+
+
+# ---------------------------------------------------------------------------
+# reduce + metrics
+# ---------------------------------------------------------------------------
+
+def predict(num, den, active, active_mask):
+    """Reduce stage: combine (psum'd) partial sums into predictions [Q,I]."""
+    base = user_means(active, active_mask)
+    return jnp.where(den > 1e-8, base + num / jnp.maximum(den, 1e-8), base)
+
+
+def rmse(pred, truth, test_mask) -> float:
+    err = (pred - truth) * test_mask
+    n = jnp.maximum(jnp.sum(test_mask), 1.0)
+    return float(jnp.sqrt(jnp.sum(err * err) / n))
+
+
+def rmse_loss(rmse_exact: float, rmse_approx: float) -> float:
+    """Paper metric: increased prediction error / exact error."""
+    return max(0.0, (rmse_approx - rmse_exact) / max(rmse_exact, 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end jobs (sharded loop on host; the pod path uses core.engine)
+# ---------------------------------------------------------------------------
+
+def _shard_slices(n, n_shards):
+    return [
+        slice(s * n // n_shards, (s + 1) * n // n_shards)
+        for s in range(n_shards)
+    ]
+
+
+def run_exact(ratings, mask, active, active_mask, *, n_shards: int = 1):
+    num = den = 0.0
+    for sl in _shard_slices(ratings.shape[0], n_shards):
+        n_, d_ = exact_map(ratings[sl], mask[sl], active, active_mask)
+        num, den = num + n_, den + d_
+    return predict(num, den, active, active_mask)
+
+
+def run_accurateml(
+    ratings, mask, active, active_mask, *, compression_ratio: float,
+    eps_max: float, lsh_key: jax.Array, n_shards: int = 1,
+    n_hashes: int = 4, bucket_width: float = 8.0,
+):
+    num = den = 0.0
+    for s, sl in enumerate(_shard_slices(ratings.shape[0], n_shards)):
+        r_, m_ = ratings[sl], mask[sl]
+        cfg = lsh_lib.config_for_compression(
+            r_.shape[0], compression_ratio, n_hashes=n_hashes,
+            bucket_width=bucket_width,
+        )
+        params = lsh_lib.init_lsh(
+            jax.random.fold_in(lsh_key, s), r_.shape[1], cfg
+        )
+        cf_agg = build_cf_aggregates(r_, m_, params)
+        budget = refine_lib.eps_to_budget(r_.shape[0], eps_max)
+        n_, d_ = accurateml_map(
+            r_, m_, cf_agg, active, active_mask, refine_budget=budget
+        )
+        num, den = num + n_, den + d_
+    return predict(num, den, active, active_mask)
+
+
+def run_sampled(
+    ratings, mask, active, active_mask, *, sample_frac: float,
+    sample_key: jax.Array, n_shards: int = 1,
+):
+    num = den = 0.0
+    for s, sl in enumerate(_shard_slices(ratings.shape[0], n_shards)):
+        r_, m_ = ratings[sl], mask[sl]
+        ns = max(1, int(sample_frac * r_.shape[0]))
+        perm = jax.random.permutation(
+            jax.random.fold_in(sample_key, s), r_.shape[0]
+        )
+        n_, d_ = sampled_map(r_, m_, active, active_mask, perm, n_sample=ns)
+        num, den = num + n_, den + d_
+    return predict(num, den, active, active_mask)
+
+
+# ---------------------------------------------------------------------------
+# shuffle-cost model (paper Fig. 5 semantics)
+# ---------------------------------------------------------------------------
+
+def shuffle_bytes_exact(n_users: int, n_items: int, n_active: int) -> int:
+    """Basic job: map emits each neighbour's (weight, centred row, mask row)."""
+    return 4 * (n_active * n_users + 2 * n_users * n_items)
+
+
+def shuffle_bytes_accurateml(
+    n_users: int, n_items: int, n_active: int,
+    compression_ratio: float, eps_max: float,
+) -> int:
+    """AccurateML job: neighbours = K centroids + refined originals."""
+    k = int(round(n_users / compression_ratio))
+    b = int(jnp.ceil(eps_max * n_users))
+    n_neigh = k + b
+    return 4 * (n_active * n_neigh + 2 * n_neigh * n_items)

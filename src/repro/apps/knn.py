@@ -1,0 +1,268 @@
+"""kNN classification on the MapReduce engine (paper §III-D application 1).
+
+Three processing paths share one combine (= reduce) stage:
+
+  * ``exact``      — scan all original points (basic map task),
+  * ``sampled``    — scan a uniform subset (the compared prior art, §IV-C),
+  * ``accurateml`` — Algorithm 1: distances to aggregated points first, then
+                     exact distances for the top-correlated buckets only.
+
+Each map shard outputs its local top-k (distance, label) per test point —
+the "fixed outputs" the paper notes for kNN — and the reduce stage merges
+shard-local top-k sets into the global top-k, then majority-votes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregate as agg_lib
+from repro.core import correlation as corr_lib
+from repro.core import lsh as lsh_lib
+from repro.core import refine as refine_lib
+from repro.kernels import ops as kernel_ops
+
+
+BIG = jnp.float32(3.0e38)
+
+
+# ---------------------------------------------------------------------------
+# distance + vote primitives
+# ---------------------------------------------------------------------------
+
+def pairwise_sq_dists(queries: jax.Array, points: jax.Array) -> jax.Array:
+    """[Q,D] x [N,D] -> [Q,N] squared L2.  Hot spot: Pallas kernel on TPU."""
+    return kernel_ops.knn_distance(queries, points)
+
+
+def local_topk(
+    dists: jax.Array, labels: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Per-query k smallest distances + their labels.
+
+    [Q,N],[N] -> [Q,k] x2 (shared label row), or [Q,N],[Q,N] -> [Q,k] x2.
+    """
+    neg, idx = jax.lax.top_k(-dists, k)
+    if labels.ndim == dists.ndim:
+        picked = jnp.take_along_axis(labels, idx, axis=-1)
+    else:
+        picked = labels[idx]
+    return -neg, picked
+
+
+def majority_vote(
+    topk_dists: jax.Array, topk_labels: jax.Array, n_classes: int
+) -> jax.Array:
+    """Majority class among valid (finite-distance) neighbours."""
+    valid = (topk_dists < BIG / 2).astype(jnp.float32)
+    onehot = jax.nn.one_hot(topk_labels, n_classes) * valid[..., None]
+    return jnp.argmax(jnp.sum(onehot, axis=-2), axis=-1).astype(jnp.int32)
+
+
+def merge_topk(
+    gathered_dists: jax.Array, gathered_labels: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """[S,Q,k] shard-local top-k -> [Q,k] global top-k (the reduce stage)."""
+    s, q, kk = gathered_dists.shape
+    flat_d = jnp.moveaxis(gathered_dists, 0, 1).reshape(q, s * kk)
+    flat_l = jnp.moveaxis(gathered_labels, 0, 1).reshape(q, s * kk)
+    return local_topk(flat_d, flat_l, k)
+
+
+# ---------------------------------------------------------------------------
+# map-task variants
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k",))
+def exact_map(train_x, train_y, test_x, *, k: int):
+    """Basic map task: all original points (paper Fig. 2a)."""
+    d = pairwise_sq_dists(test_x, train_x)
+    return local_topk(d, train_y, k)
+
+
+@partial(jax.jit, static_argnames=("k", "n_sample"))
+def sampled_map(train_x, train_y, test_x, sample_idx, *, k: int, n_sample: int):
+    """Prior-art approximation: uniform subset of ``n_sample`` points."""
+    sub_x = train_x[sample_idx[:n_sample]]
+    sub_y = train_y[sample_idx[:n_sample]]
+    d = pairwise_sq_dists(test_x, sub_x)
+    return local_topk(d, sub_y, k)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class KNNAggregates:
+    """Aggregated training shard: centroids + bucket-majority labels."""
+
+    agg: agg_lib.AggregatedData
+    bucket_labels: jax.Array  # [K] majority label per bucket
+
+    def tree_flatten(self):
+        return (self.agg, self.bucket_labels), None
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+
+def build_knn_aggregates(
+    train_x: jax.Array, train_y: jax.Array, params: lsh_lib.LSHParams,
+    n_classes: int,
+) -> KNNAggregates:
+    ids = lsh_lib.bucket_ids(train_x, params)
+    agg = agg_lib.aggregate_by_bucket(train_x, ids, params.config.n_buckets)
+    label_hist = jax.ops.segment_sum(
+        jax.nn.one_hot(train_y, n_classes),
+        ids,
+        num_segments=params.config.n_buckets,
+    )
+    bucket_labels = jnp.argmax(label_hist, axis=-1).astype(jnp.int32)
+    return KNNAggregates(agg=agg, bucket_labels=bucket_labels)
+
+
+@partial(jax.jit, static_argnames=("k", "refine_budget"))
+def accurateml_map(
+    train_x: jax.Array,
+    train_y: jax.Array,
+    knn_agg: KNNAggregates,
+    test_x: jax.Array,
+    *,
+    k: int,
+    refine_budget: int,
+):
+    """Algorithm 1 instantiated for kNN (per test-point refinement ranking).
+
+    Stage 1: distances from every test point to every *aggregated* point.
+    Correlation of bucket i (Definition 4): c_i = -dist(test, centroid_i).
+
+    Stage 2 (paper-faithful, per query): each test point ranks buckets by
+    its own correlations and refines the top buckets until ``refine_budget``
+    original points were processed *for that query* (Alg. 1 runs per test
+    point).  Refined buckets' centroids are masked out of the candidate set
+    (replace, not double-count); final output is a joint top-k over
+    [unrefined centroids ∪ refined originals].
+    """
+    agg = knn_agg.agg
+    # ---- stage 1: initial output from aggregated points ----
+    d_cent = pairwise_sq_dists(test_x, agg.means)            # [Q, K]
+    d_cent = jnp.where(agg.counts[None, :] > 0, d_cent, BIG)
+    corr = -d_cent                                           # [Q, K]
+
+    if refine_budget <= 0:
+        dists, labels = local_topk(d_cent, knn_agg.bucket_labels, k)
+        return dists, labels
+
+    # ---- stage 2: per-query refinement of the top-correlated buckets ----
+    rankings = corr_lib.rank_buckets_multi(corr, agg.counts)  # [Q, K]
+    idx, valid = jax.vmap(
+        lambda r: agg_lib.refinement_indices(agg, r, refine_budget)
+    )(rankings)                                               # [Q, B] x2
+    covered = jax.vmap(
+        lambda r: agg_lib.buckets_fully_covered(agg, r, refine_budget)
+    )(rankings)                                               # [Q, K]
+    covered = covered & (agg.counts[None, :] > 0)
+
+    ref_x = train_x[idx]                                      # [Q, B, D]
+    ref_y = train_y[idx]                                      # [Q, B]
+    # Per-query exact distances: |q|^2 - 2 q.x + |x|^2 via a batched dot.
+    q2 = jnp.sum(test_x.astype(jnp.float32) ** 2, axis=-1)    # [Q]
+    x2 = jnp.sum(ref_x.astype(jnp.float32) ** 2, axis=-1)     # [Q, B]
+    cross = jnp.einsum(
+        "qd,qbd->qb", test_x.astype(jnp.float32),
+        ref_x.astype(jnp.float32),
+    )
+    d_ref = jnp.maximum(q2[:, None] - 2.0 * cross + x2, 0.0)  # [Q, B]
+    d_ref = jnp.where(valid, d_ref, BIG)
+    d_cent_masked = jnp.where(covered, BIG, d_cent)
+
+    cand_d = jnp.concatenate([d_cent_masked, d_ref], axis=1)
+    cand_l = jnp.concatenate(
+        [
+            jnp.broadcast_to(knn_agg.bucket_labels[None, :], d_cent.shape),
+            ref_y,
+        ],
+        axis=1,
+    )
+    return local_topk(cand_d, cand_l, k)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end jobs (single-host reference path used by tests/benchmarks;
+# the pod-mesh path shards train_x/train_y over the `data` axis with the
+# identical map/combine functions via core.engine.MapReduce)
+# ---------------------------------------------------------------------------
+
+def run_exact(
+    train_x, train_y, test_x, *, k: int, n_classes: int, n_shards: int = 1
+):
+    shards_d, shards_l = [], []
+    for s in range(n_shards):
+        sl = slice(
+            s * train_x.shape[0] // n_shards,
+            (s + 1) * train_x.shape[0] // n_shards,
+        )
+        d, l = exact_map(train_x[sl], train_y[sl], test_x, k=k)
+        shards_d.append(d)
+        shards_l.append(l)
+    d, l = merge_topk(jnp.stack(shards_d), jnp.stack(shards_l), k)
+    return majority_vote(d, l, n_classes)
+
+
+def run_accurateml(
+    train_x, train_y, test_x, *, k: int, n_classes: int,
+    compression_ratio: float, eps_max: float, lsh_key: jax.Array,
+    n_shards: int = 1, n_hashes: int = 4, bucket_width: float = 4.0,
+):
+    shards_d, shards_l = [], []
+    n = train_x.shape[0]
+    for s in range(n_shards):
+        sl = slice(s * n // n_shards, (s + 1) * n // n_shards)
+        sx, sy = train_x[sl], train_y[sl]
+        cfg = lsh_lib.config_for_compression(
+            sx.shape[0], compression_ratio, n_hashes=n_hashes,
+            bucket_width=bucket_width,
+        )
+        params = lsh_lib.init_lsh(
+            jax.random.fold_in(lsh_key, s), sx.shape[1], cfg
+        )
+        knn_agg = build_knn_aggregates(sx, sy, params, n_classes)
+        budget = refine_lib.eps_to_budget(sx.shape[0], eps_max)
+        d, l = accurateml_map(
+            sx, sy, knn_agg, test_x, k=k, refine_budget=budget
+        )
+        shards_d.append(d)
+        shards_l.append(l)
+    d, l = merge_topk(jnp.stack(shards_d), jnp.stack(shards_l), k)
+    return majority_vote(d, l, n_classes)
+
+
+def run_sampled(
+    train_x, train_y, test_x, *, k: int, n_classes: int,
+    sample_frac: float, sample_key: jax.Array, n_shards: int = 1,
+):
+    shards_d, shards_l = [], []
+    n = train_x.shape[0]
+    for s in range(n_shards):
+        sl = slice(s * n // n_shards, (s + 1) * n // n_shards)
+        sx, sy = train_x[sl], train_y[sl]
+        ns = max(1, int(sample_frac * sx.shape[0]))
+        perm = jax.random.permutation(
+            jax.random.fold_in(sample_key, s), sx.shape[0]
+        )
+        d, l = sampled_map(sx, sy, test_x, perm, k=k, n_sample=ns)
+        shards_d.append(d)
+        shards_l.append(l)
+    d, l = merge_topk(jnp.stack(shards_d), jnp.stack(shards_l), k)
+    return majority_vote(d, l, n_classes)
+
+
+def accuracy(pred: jax.Array, truth: jax.Array) -> float:
+    return float(jnp.mean((pred == truth).astype(jnp.float32)))
+
+
+def accuracy_loss(acc_exact: float, acc_approx: float) -> float:
+    """Paper metric: decreased accuracy / exact accuracy."""
+    return max(0.0, (acc_exact - acc_approx) / max(acc_exact, 1e-12))

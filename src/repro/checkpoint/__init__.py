@@ -1,0 +1,2 @@
+"""Checkpoint substrate."""
+from repro.checkpoint.checkpoint import Checkpointer  # noqa: F401

@@ -1,0 +1,17 @@
+"""AccurateML core: LSH aggregation + two-stage correlation-guided refinement."""
+from repro.core.lsh import (  # noqa: F401
+    LSHConfig, LSHParams, init_lsh, bucket_ids, raw_hashes,
+    config_for_compression,
+)
+from repro.core.aggregate import (  # noqa: F401
+    AggregatedData, build_aggregates, aggregate_by_bucket,
+    refinement_indices, buckets_fully_covered,
+)
+from repro.core.correlation import (  # noqa: F401
+    rank_buckets, rank_buckets_multi, pooled_ranking, mask_empty, NEG_INF,
+)
+from repro.core.refine import (  # noqa: F401
+    RefinementSelection, select_refinement, two_stage, eps_to_budget,
+)
+from repro.core.engine import MapReduce, CombineSpec, shard_leading  # noqa: F401
+from repro.core.budget import CostModel, BudgetPolicy  # noqa: F401

@@ -1,0 +1,54 @@
+"""Correlation-to-result-accuracy estimation and ranking (AccurateML Def. 4, Alg. 1 l.1-3).
+
+A bucket's *correlation* c_i is the estimated accuracy improvement from
+processing its original points.  Stage 1 computes c_i for free while
+producing the initial output:
+
+  * kNN classification: c_i = -distance(aggregated point, test point)
+  * CF recommendation:  c_i = weight(aggregated user, active user)
+  * aggregated-KV attention: c_i = q · mean_k_i (attention logit to centroid)
+
+This module holds the app-independent pieces: masking empty buckets and the
+descending ranking.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-3.0e38)
+
+
+def mask_empty(correlations: jax.Array, counts: jax.Array) -> jax.Array:
+    """Empty buckets carry no original data: never rank them for refinement."""
+    return jnp.where(counts > 0, correlations, NEG_INF)
+
+
+def rank_buckets(correlations: jax.Array, counts: jax.Array) -> jax.Array:
+    """Descending ranking of bucket ids by correlation (Alg. 1 line 2)."""
+    masked = mask_empty(correlations.astype(jnp.float32), counts)
+    return jnp.argsort(-masked).astype(jnp.int32)
+
+
+def rank_buckets_multi(correlations: jax.Array, counts: jax.Array) -> jax.Array:
+    """Ranking for a batch of queries: [Q, K] correlations -> [Q, K] rankings.
+
+    Used when one map shard serves many test points/active users: each query
+    gets its own refinement order (the paper runs Alg. 1 per test point).
+    """
+    masked = jnp.where(
+        counts[None, :] > 0, correlations.astype(jnp.float32), NEG_INF
+    )
+    return jnp.argsort(-masked, axis=-1).astype(jnp.int32)
+
+
+def pooled_ranking(correlations: jax.Array, counts: jax.Array) -> jax.Array:
+    """One shared ranking for a batch of queries (max-pooled correlation).
+
+    Fixed-shape friendly variant: when refinement must gather one shared set
+    of original points for the whole query batch (so the gathered block is
+    reused across the batch on the MXU), pool the per-query correlations.
+    A bucket matters if *any* query finds it highly correlated.
+    """
+    pooled = jnp.max(correlations.astype(jnp.float32), axis=0)
+    return rank_buckets(pooled, counts)

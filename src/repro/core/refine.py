@@ -1,0 +1,87 @@
+"""Algorithm 1 — information-aggregation-based approximate processing — as a
+generic, fixed-shape JAX control-flow skeleton.
+
+An application plugs in two pure functions:
+
+  stage1(means, counts)            -> (initial_output, correlations[K])
+  stage2(initial_output, selection)-> refined_output
+
+where ``selection`` packages the gathered original points of the
+top-correlated buckets plus the masks needed to *replace* (not double-count)
+their aggregated contributions.  The skeleton is shared by the kNN app, the
+CF app, and the aggregated-KV attention module.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregate as agg_lib
+from repro.core import correlation as corr_lib
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class RefinementSelection:
+    """Fixed-shape stage-2 work set (the paper's ranked D'_1..D'_i sets)."""
+
+    point_idx: jax.Array      # [B] indices into original data
+    point_valid: jax.Array    # [B] bool, False on padding
+    point_bucket: jax.Array   # [B] bucket id of each selected point
+    bucket_covered: jax.Array  # [K] bool, bucket fully refined -> replace aggregate
+
+    def tree_flatten(self):
+        return (
+            self.point_idx, self.point_valid, self.point_bucket,
+            self.bucket_covered,
+        ), None
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+
+def select_refinement(
+    agg: agg_lib.AggregatedData,
+    correlations: jax.Array,
+    budget: int,
+) -> RefinementSelection:
+    """Rank buckets by correlation and select a fixed budget of originals."""
+    ranking = corr_lib.rank_buckets(correlations, agg.counts)
+    idx, valid = agg_lib.refinement_indices(agg, ranking, budget)
+    covered = agg_lib.buckets_fully_covered(agg, ranking, budget)
+    return RefinementSelection(
+        point_idx=idx,
+        point_valid=valid,
+        point_bucket=agg.bucket_of[idx],
+        bucket_covered=covered & (agg.counts > 0),
+    )
+
+
+def two_stage(
+    agg: agg_lib.AggregatedData,
+    stage1: Callable[[jax.Array, jax.Array], tuple],
+    stage2: Callable[[object, RefinementSelection], object],
+    *,
+    refine_budget: int,
+):
+    """Run Algorithm 1: initial output from aggregates, refine top buckets.
+
+    ``refine_budget`` is the fixed number of original points stage 2 may
+    touch (= ceil(eps_max * N) at the caller).  ``refine_budget == 0`` skips
+    stage 2 entirely (pure stage-1 approximation).
+    """
+    initial, correlations = stage1(agg.means, agg.counts)
+    if refine_budget <= 0:
+        return initial
+    sel = select_refinement(agg, correlations, refine_budget)
+    return stage2(initial, sel)
+
+
+def eps_to_budget(n_points: int, eps_max: float) -> int:
+    """Paper knob -> fixed-shape budget: eps_max is the max *fraction* of
+    original points processed during refinement."""
+    return int(jnp.ceil(eps_max * n_points)) if eps_max > 0 else 0

@@ -1,0 +1,1 @@
+"""Data substrate: synthetic dataset generators + sharded input pipeline."""

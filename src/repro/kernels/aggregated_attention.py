@@ -1,0 +1,172 @@
+"""Pallas TPU kernel: AccurateML two-stage aggregated decode attention.
+
+The TPU-idiomatic decomposition (DESIGN.md §2): both stages of Algorithm 1
+are the SAME primitive — a masked, additively-biased flash-decode pass —
+applied to different operands:
+
+  token pass     keys/values = the raw KV cache; bias masks everything
+                 outside the refined buckets (and unwritten slots),
+  centroid pass  keys/values = bucket centroids; bias = log(count) for live
+                 unrefined buckets (count-weighted aggregate contribution),
+
+followed by an O(H) partial-softmax merge.  The bucket->token membership
+mask is precomputed as a bias vector outside the kernel (an elementwise
+gather), so the kernel itself is a dense MXU pipeline over VMEM tiles —
+"block-sparse via bias", which is how refinement skipping stays
+hardware-aligned.  Grid: (kv_head, seq_tile); the (m, l, acc) outputs are
+revisited across seq tiles (constant index map) for online accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1.0e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, bias_ref, m_ref, l_ref, acc_ref,
+                   *, scale):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)             # [G, dk]
+    k = k_ref[0].astype(jnp.float32)             # [TT, dk]
+    v = v_ref[0].astype(jnp.float32)             # [TT, dv]
+    bias = bias_ref[0].astype(jnp.float32)       # [TT]
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale + bias[None, :]                    # [G, TT]
+
+    m_old = m_ref[0]                             # [G]
+    l_old = l_ref[0]
+    acc_old = acc_ref[0]                         # [G, dv]
+    m_blk = jnp.max(logits, axis=-1)
+    m_new = jnp.maximum(m_old, m_blk)
+    alpha = jnp.exp(m_old - m_new)
+    p = jnp.exp(logits - m_new[:, None])
+    p = jnp.where(bias[None, :] > NEG / 2, p, 0.0)
+    l_new = l_old * alpha + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_new = acc_old * alpha[:, None] + pv
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+    acc_ref[0] = acc_new
+
+
+def _pad_axis(x, mult, axis, value=0.0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def masked_decode_attention(
+    q: jax.Array,       # [Hkv, G, dk]
+    keys: jax.Array,    # [Hkv, T, dk]
+    values: jax.Array,  # [Hkv, T, dv]
+    bias: jax.Array,    # [T] additive logit bias (-1e30 = masked)
+    *, scale: float, tile: int = 512, interpret: bool = False,
+):
+    """One masked flash-decode pass.  Returns (m, l, acc) partials."""
+    hkv, g0, dk0 = q.shape
+    dv0 = values.shape[-1]
+    qp = _pad_axis(_pad_axis(q, 8, 1), 128, 2)
+    kp = _pad_axis(_pad_axis(keys, 128, 2), tile, 1)
+    vp = _pad_axis(_pad_axis(values, 128, 2), tile, 1)
+    bp = _pad_axis(bias[None, :], tile, 1, value=NEG)     # [1, Tp]
+    g, dk = qp.shape[1], qp.shape[2]
+    t, dv = kp.shape[1], vp.shape[2]
+
+    m, l, acc = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale),
+        grid=(hkv, t // tile),
+        in_specs=[
+            pl.BlockSpec((1, g, dk), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1, tile, dk), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, tile, dv), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, tile), lambda h, i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, g), lambda h, i: (h, 0)),
+            pl.BlockSpec((1, g), lambda h, i: (h, 0)),
+            pl.BlockSpec((1, g, dv), lambda h, i: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((hkv, g), jnp.float32),
+            jax.ShapeDtypeStruct((hkv, g), jnp.float32),
+            jax.ShapeDtypeStruct((hkv, g, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp, bp)
+    return m[:, :g0], l[:, :g0], acc[:, :g0, :dv0]
+
+
+def merge_partials(parts):
+    """Merge [(m, l, acc), ...] partial-softmax triples."""
+    m = parts[0][0]
+    for p in parts[1:]:
+        m = jnp.maximum(m, p[0])
+    l = sum(p[1] * jnp.exp(p[0] - m) for p in parts)
+    acc = sum(p[2] * jnp.exp(p[0] - m)[..., None] for p in parts)
+    return acc / jnp.maximum(l[..., None], 1e-30)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "tile", "interpret")
+)
+def aggregated_attention_pallas(
+    q: jax.Array,            # [H, dk]
+    k_cache: jax.Array,      # [S, Hkv, dk]
+    v_cache: jax.Array,      # [S, Hkv, dv]
+    bucket_of: jax.Array,    # [S] int32
+    mean_k: jax.Array,       # [K, Hkv, dk]
+    mean_v: jax.Array,       # [K, Hkv, dv]
+    counts: jax.Array,       # [K] int32
+    refined: jax.Array,      # [K] bool
+    *, scale: float, valid_len=None, tile: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Two-stage aggregated decode attention; semantics = ref oracle."""
+    hq, dk = q.shape
+    s, hkv, _ = k_cache.shape
+    kb = mean_k.shape[0]
+    g = hq // hkv
+
+    # stage masks -> additive biases (computed outside the kernel: cheap
+    # elementwise gathers; keeps the kernel a dense MXU pipeline)
+    tok_live = refined[bucket_of]
+    if valid_len is not None:
+        tok_live = tok_live & (jnp.arange(s) < valid_len)
+    tok_bias = jnp.where(tok_live, 0.0, NEG).astype(jnp.float32)
+    cent_live = (~refined) & (counts > 0)
+    cent_bias = jnp.where(
+        cent_live,
+        jnp.log(jnp.maximum(counts.astype(jnp.float32), 1.0)),
+        NEG,
+    ).astype(jnp.float32)
+
+    qh = q.reshape(hkv, g, dk)
+    tok = masked_decode_attention(
+        qh, jnp.moveaxis(k_cache, 1, 0), jnp.moveaxis(v_cache, 1, 0),
+        tok_bias, scale=scale, tile=tile, interpret=interpret,
+    )
+    cent = masked_decode_attention(
+        qh, jnp.moveaxis(mean_k, 1, 0), jnp.moveaxis(mean_v, 1, 0),
+        cent_bias, scale=scale, tile=min(tile, 512), interpret=interpret,
+    )
+    out = merge_partials([tok, cent])            # [Hkv, G, dv]
+    return out.reshape(hq, -1)

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: tiled squared-L2 distance matrix (kNN map-task hot loop).
+
+Grid (Q/TQ, N/TN); each step loads a [TQ, D] query tile and a [TN, D] point
+tile into VMEM, runs the cross matmul on the MXU and assembles
+|q|^2 - 2 q.p + |p|^2 in VREGs.  The wrapper zero-pads D/Q/N to tile
+multiples — zero feature padding is distance-neutral.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, p_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)          # [TQ, D]
+    p = p_ref[...].astype(jnp.float32)          # [TN, D]
+    cross = jax.lax.dot_general(
+        q, p, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                           # [TQ, TN]
+    q2 = jnp.sum(q * q, axis=1, keepdims=True)  # [TQ, 1]
+    p2 = jnp.sum(p * p, axis=1, keepdims=True).T
+    out_ref[...] = jnp.maximum(q2 - 2.0 * cross + p2, 0.0)
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tq", "tn", "interpret")
+)
+def knn_distance_pallas(
+    queries: jax.Array, points: jax.Array, *, tq: int = 128, tn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """[Q,D] x [N,D] -> [Q,N] float32 squared distances."""
+    q0, n0 = queries.shape[0], points.shape[0]
+    q = _pad_to(_pad_to(queries, 128, 1), tq, 0)
+    p = _pad_to(_pad_to(points, 128, 1), tn, 0)
+    qq, nn, d = q.shape[0], p.shape[0], q.shape[1]
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(qq // tq, nn // tn),
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tq, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qq, nn), jnp.float32),
+        interpret=interpret,
+    )(q, p)
+    return out[:q0, :n0]

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: fused p-stable LSH hash (projection + floor-divide).
+
+One pass over the data computes floor((X @ A + b) / w) without materializing
+the fp32 projection in HBM — the paper's §III-B step 1 at memory-bound
+roofline.  Grid over N tiles; A ([D, H], H small) stays resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, a_ref, b_ref, out_ref, *, width):
+    x = x_ref[...].astype(jnp.float32)           # [TN, D]
+    a = a_ref[...].astype(jnp.float32)           # [D, H]
+    proj = jax.lax.dot_general(
+        x, a, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) + b_ref[...][None, :]
+    out_ref[...] = jnp.floor(proj / width).astype(jnp.int32)
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("width", "tn", "interpret")
+)
+def lsh_hash_pallas(
+    data: jax.Array, a: jax.Array, b: jax.Array, width: float,
+    *, tn: int = 256, interpret: bool = False,
+) -> jax.Array:
+    """[N,D] x [D,H] -> [N,H] int32 bucket hashes."""
+    n0, h0 = data.shape[0], a.shape[1]
+    x = _pad_to(_pad_to(data, 128, 1), tn, 0)
+    ap = _pad_to(_pad_to(a, 128, 0), 8, 1)
+    bp = _pad_to(b, 8, 0)
+    nn, d = x.shape
+    h = ap.shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, width=width),
+        grid=(nn // tn,),
+        in_specs=[
+            pl.BlockSpec((tn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tn, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nn, h), jnp.int32),
+        interpret=interpret,
+    )(x, ap, bp)
+    return out[:n0, :h0]

@@ -1,0 +1,99 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy:
+  * On TPU backends: call the Pallas kernel (compiled).
+  * Elsewhere (this container is CPU): call the pure-jnp reference, which is
+    bit-compatible with the kernels (kernel tests run the Pallas bodies in
+    interpret mode against the same reference).
+
+``force`` lets tests pin a path: "pallas_interpret" runs the real kernel
+body under the Pallas interpreter on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:  # pragma: no cover
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def knn_distance(
+    queries: jax.Array, points: jax.Array, *, force: str | None = None
+) -> jax.Array:
+    """Squared-L2 distance matrix [Q,N]; MXU-tiled Pallas kernel on TPU."""
+    if force == "ref":
+        return ref.knn_distance(queries, points)
+    if force == "pallas_interpret" or _on_tpu():
+        from repro.kernels import knn_distance as kk
+        return kk.knn_distance_pallas(
+            queries, points, interpret=force == "pallas_interpret"
+        )
+    return ref.knn_distance(queries, points)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "force"))
+def lsh_hash(
+    data: jax.Array, a: jax.Array, b: jax.Array, width: float,
+    *, force: str | None = None,
+) -> jax.Array:
+    """Fused projection+floor p-stable hash, [N,H] int32."""
+    if force == "ref":
+        return ref.lsh_hash(data, a, b, width)
+    if force == "pallas_interpret" or _on_tpu():
+        from repro.kernels import lsh_hash as lk
+        return lk.lsh_hash_pallas(
+            data, a, b, width, interpret=force == "pallas_interpret"
+        )
+    return ref.lsh_hash(data, a, b, width)
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def cf_weights(
+    active: jax.Array, active_mask: jax.Array,
+    users: jax.Array, users_mask: jax.Array,
+    *, force: str | None = None,
+) -> jax.Array:
+    """Masked Pearson weight matrix [Q,U]."""
+    if force == "ref":
+        return ref.cf_weights(active, active_mask, users, users_mask)
+    if force == "pallas_interpret" or _on_tpu():
+        from repro.kernels import cf_weights as ck
+        return ck.cf_weights_pallas(
+            active, active_mask, users, users_mask,
+            interpret=force == "pallas_interpret",
+        )
+    return ref.cf_weights(active, active_mask, users, users_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "force"))
+def aggregated_attention_decode(
+    q, k_cache, v_cache, bucket_of, mean_k, mean_v, counts, refined,
+    *, scale: float, valid_len=None, force: str | None = None,
+):
+    """Two-stage (centroid + refined-bucket) decode attention, [H,d]."""
+    if force == "ref":
+        return ref.aggregated_attention_decode(
+            q, k_cache, v_cache, bucket_of, mean_k, mean_v, counts,
+            refined, scale, valid_len,
+        )
+    if force == "pallas_interpret" or _on_tpu():
+        from repro.kernels import aggregated_attention as ak
+        return ak.aggregated_attention_pallas(
+            q, k_cache, v_cache, bucket_of, mean_k, mean_v, counts,
+            refined, scale=scale, valid_len=valid_len,
+            interpret=force == "pallas_interpret",
+        )
+    return ref.aggregated_attention_decode(
+        q, k_cache, v_cache, bucket_of, mean_k, mean_v, counts, refined,
+        scale, valid_len,
+    )

@@ -1,0 +1,136 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth: kernel tests sweep shapes and
+dtypes and assert allclose against these, and `ops.py` falls back to them on
+backends without Pallas support (CPU tests run kernels in interpret mode AND
+compare against these).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def knn_distance(queries: jax.Array, points: jax.Array) -> jax.Array:
+    """Squared L2 distance matrix. [Q,D],[N,D] -> [Q,N] float32.
+
+    Expanded form (|q|^2 - 2 q.p + |p|^2) so the hot loop is one matmul —
+    the same contraction the Pallas kernel tiles onto the MXU.
+    """
+    q = queries.astype(jnp.float32)
+    p = points.astype(jnp.float32)
+    q2 = jnp.sum(q * q, axis=-1, keepdims=True)        # [Q,1]
+    p2 = jnp.sum(p * p, axis=-1, keepdims=True).T      # [1,N]
+    cross = q @ p.T                                    # [Q,N]
+    return jnp.maximum(q2 - 2.0 * cross + p2, 0.0)
+
+
+def lsh_hash(
+    data: jax.Array, a: jax.Array, b: jax.Array, width: float
+) -> jax.Array:
+    """p-stable hashes floor((data @ a + b)/w). [N,D],[D,H],[H] -> [N,H] int32."""
+    proj = data.astype(jnp.float32) @ a.astype(jnp.float32) + b[None, :]
+    return jnp.floor(proj / width).astype(jnp.int32)
+
+
+def cf_weights(
+    active: jax.Array, active_mask: jax.Array,
+    users: jax.Array, users_mask: jax.Array,
+) -> jax.Array:
+    """Masked Pearson weights between active users and neighbour users.
+
+    [Q,I],[Q,I],[U,I],[U,I] -> [Q,U] float32, over co-rated items only.
+    """
+    a = active.astype(jnp.float32)
+    am = active_mask.astype(jnp.float32)
+    u = users.astype(jnp.float32)
+    um = users_mask.astype(jnp.float32)
+
+    a_mean = jnp.sum(a * am, axis=1, keepdims=True) / jnp.maximum(
+        jnp.sum(am, axis=1, keepdims=True), 1.0
+    )
+    u_mean = jnp.sum(u * um, axis=1, keepdims=True) / jnp.maximum(
+        jnp.sum(um, axis=1, keepdims=True), 1.0
+    )
+    ac = (a - a_mean) * am                             # centred, masked
+    uc = (u - u_mean) * um
+
+    num = ac @ uc.T                                    # [Q,U]
+    a_sq = (ac * ac) @ um.T                            # sum over co-rated
+    u_sq = am @ (uc * uc).T
+    den = jnp.sqrt(jnp.maximum(a_sq * u_sq, 1e-12))
+    return num / den
+
+
+def aggregated_attention_decode(
+    q: jax.Array,                 # [H, d]
+    k_cache: jax.Array,           # [S, Hkv, d]
+    v_cache: jax.Array,           # [S, Hkv, d]
+    bucket_of: jax.Array,         # [S] int32 in [0, K)
+    mean_k: jax.Array,            # [K, Hkv, d]
+    mean_v: jax.Array,            # [K, Hkv, d]
+    counts: jax.Array,            # [K] int32
+    refined: jax.Array,           # [K] bool — buckets attended exactly
+    scale: float,
+    valid_len: jax.Array | int | None = None,  # tokens written (<= S)
+) -> jax.Array:
+    """AccurateML two-stage decode attention oracle. Returns [H, d] float32.
+
+    Refined buckets contribute their exact tokens; unrefined buckets
+    contribute their centroid with logit  q·mean_k  and weight multiplied by
+    ``count`` (all tokens retained in aggregate — the paper's differentiator
+    vs. token-dropping sparsity).  GQA: query head h uses kv head
+    h // (H // Hkv).
+    """
+    hq, d = q.shape
+    s, hkv, _ = k_cache.shape
+    kb = mean_k.shape[0]
+    group = hq // hkv
+
+    qf = q.astype(jnp.float32)
+    tok_live = jnp.ones((s,), bool)
+    if valid_len is not None:
+        tok_live = jnp.arange(s) < valid_len
+    out = []
+    for h in range(hq):
+        kvh = h // group
+        logits_tok = (k_cache[:, kvh, :].astype(jnp.float32) @ qf[h]) * scale
+        tok_refined = refined[bucket_of] & tok_live
+        logits_tok = jnp.where(tok_refined, logits_tok, -jnp.inf)
+
+        logits_cent = (mean_k[:, kvh, :].astype(jnp.float32) @ qf[h]) * scale
+        cent_live = (~refined) & (counts > 0)
+        logits_cent = jnp.where(cent_live, logits_cent, -jnp.inf)
+        log_mult = jnp.where(
+            cent_live, jnp.log(jnp.maximum(counts.astype(jnp.float32), 1.0)),
+            0.0,
+        )
+        logits_cent = logits_cent + log_mult  # weight centroid by count
+
+        all_logits = jnp.concatenate([logits_tok, logits_cent])
+        m = jnp.max(all_logits)
+        w = jnp.exp(all_logits - m)
+        w = jnp.where(jnp.isfinite(all_logits), w, 0.0)
+        denom = jnp.maximum(jnp.sum(w), 1e-30)
+        vals = jnp.concatenate(
+            [
+                v_cache[:, kvh, :].astype(jnp.float32),
+                mean_v[:, kvh, :].astype(jnp.float32),
+            ],
+            axis=0,
+        )
+        out.append((w @ vals) / denom)
+    return jnp.stack(out)
+
+
+def segment_mean(
+    data: jax.Array, ids: jax.Array, n_segments: int
+) -> tuple[jax.Array, jax.Array]:
+    """Bucket means + counts: [N,D],[N] -> ([K,D], [K])."""
+    counts = jax.ops.segment_sum(
+        jnp.ones(ids.shape, jnp.float32), ids, num_segments=n_segments
+    )
+    sums = jax.ops.segment_sum(
+        data.astype(jnp.float32), ids, num_segments=n_segments
+    )
+    return sums / jnp.maximum(counts[:, None], 1.0), counts.astype(jnp.int32)

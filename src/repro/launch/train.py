@@ -1,0 +1,128 @@
+"""Step factories + a host training loop driver.
+
+``make_train_step`` builds the pure (params, opt_state, batch) -> (params,
+opt_state, metrics) function that both the real trainer and the dry-run
+lower; shardings are attached by the caller (launch/dryrun.py or the
+examples).  The CLI trains a reduced config on whatever devices exist.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs import SHAPES, get_config
+from repro.models import (
+    NO_PARALLEL, ParallelContext, init_caches, init_params, loss_fn,
+    prefill, serve_step,
+)
+
+
+def make_train_step(cfg, opt_cfg: optim.AdamWConfig,
+                    parallel: ParallelContext = NO_PARALLEL,
+                    grad_compress_frac: float = 0.0):
+    """Returns train_step(params, opt_state[, ef], batch) -> (...)."""
+
+    if grad_compress_frac > 0.0:
+        def train_step(params, opt_state, ef, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, batch, cfg, parallel=parallel
+            )
+            sent, ef, _ = optim.compress_topk(
+                grads, ef, frac=grad_compress_frac
+            )
+            params, opt_state = optim.apply_updates(
+                params, sent, opt_state, opt_cfg
+            )
+            return params, opt_state, ef, {"loss": loss}
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, batch, cfg, parallel=parallel
+        )
+        params, opt_state = optim.apply_updates(
+            params, grads, opt_state, opt_cfg
+        )
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg, parallel: ParallelContext = NO_PARALLEL):
+    def prefill_step(params, batch):
+        return prefill(
+            params, batch["tokens"], cfg, parallel=parallel,
+            mrope_positions=batch.get("mrope_positions"),
+            frames=batch.get("frames"),
+        )
+    return prefill_step
+
+
+def make_serve_step(cfg, parallel: ParallelContext = NO_PARALLEL):
+    def step(params, caches, batch):
+        return serve_step(
+            params, caches, batch["tokens"], batch["pos"], cfg,
+            parallel=parallel,
+            mrope_positions=batch.get("mrope_positions"),
+        )
+    return step
+
+
+def synth_batch(key, cfg, *, batch: int, seq: int) -> dict[str, Any]:
+    """Synthetic token batch matching ``input_specs`` shapes."""
+    kt, kl = jax.random.split(key)
+    out = {
+        "tokens": jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size),
+        "labels": jax.random.randint(kl, (batch, seq), 0, cfg.vocab_size),
+    }
+    if cfg.is_encoder_decoder:
+        out["frames"] = jax.random.normal(
+            key, (batch, seq, cfg.d_model), dtype=jnp.dtype(cfg.dtype)
+        )
+    if cfg.mrope:
+        pos = jnp.broadcast_to(
+            jnp.arange(seq)[None, None], (3, batch, seq)
+        ).astype(jnp.int32)
+        out["mrope_positions"] = pos
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    opt_cfg = optim.AdamWConfig(
+        lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+        total_steps=args.steps,
+    )
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    opt_state = optim.init_state(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+
+    for i in range(args.steps):
+        batch = synth_batch(
+            jax.random.fold_in(key, i), cfg, batch=args.batch, seq=args.seq
+        )
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        print(f"step {i:4d} loss {loss:.4f} "
+              f"({(time.perf_counter()-t0)*1e3:.0f} ms)")
+
+
+if __name__ == "__main__":
+    main()

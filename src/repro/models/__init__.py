@@ -1,0 +1,5 @@
+"""LM model zoo: unified transformer/SSM/xLSTM/MoE/enc-dec assembly."""
+from repro.models.model import (  # noqa: F401
+    init_params, forward, loss_fn, prefill, init_caches, serve_step,
+)
+from repro.models.transformer import ParallelContext, NO_PARALLEL  # noqa: F401

@@ -1,0 +1,419 @@
+"""Aggregated-KV attention: AccurateML's two-stage algorithm on the KV cache.
+
+This is the paper's contribution as a first-class LM serving feature
+(DESIGN.md §2.1).  The KV cache is LSH-bucketed exactly as the paper buckets
+map-task input; each bucket holds running (mean_k, mean_v, count).  Decode:
+
+  stage 1  q · mean_k over all K buckets  ->  initial attention + the
+           correlation c_i of Definition 4 (the attention logit),
+  stage 2  the top refine_frac buckets are re-attended *exactly* over their
+           original tokens; the rest contribute centroids weighted by count
+           (log-count logit bias) — information of every token is retained,
+           never dropped, the paper's differentiator vs. sampling/eviction.
+
+Per-token decode cost:  O(K + eps·S)  instead of  O(S),  K = S / r.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kernel_ops
+
+Params = dict[str, Any]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class AggKVCache:
+    """Per-layer aggregated KV cache (one attention layer, full batch)."""
+
+    k: jax.Array           # [B, S, Hkv, dk]
+    v: jax.Array           # [B, S, Hkv, dv]
+    bucket_of: jax.Array   # [B, S] int32
+    mean_k: jax.Array      # [B, K, Hkv, dk]
+    mean_v: jax.Array      # [B, K, Hkv, dv]
+    counts: jax.Array      # [B, K] int32
+    lsh_a: jax.Array       # [Hkv*dk, n_hashes] projection (per layer)
+    lsh_b: jax.Array       # [n_hashes]
+
+    def tree_flatten(self):
+        return (
+            self.k, self.v, self.bucket_of, self.mean_k, self.mean_v,
+            self.counts, self.lsh_a, self.lsh_b,
+        ), None
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+    @property
+    def n_buckets(self) -> int:
+        return self.mean_k.shape[1]
+
+
+LSH_WIDTH = 4.0
+_PRIMES = jnp.array(
+    [2654435761, 2246822519, 3266489917, 668265263], dtype=jnp.uint32
+)
+
+
+def init_cache(
+    key: jax.Array, *, batch: int, s_max: int, n_kv: int, dk: int,
+    dv: int | None = None, compression: int, dtype=jnp.bfloat16,
+    n_hashes: int = 4,
+) -> AggKVCache:
+    dv = dk if dv is None else dv
+    n_buckets = max(1, s_max // compression)
+    ka, kb = jax.random.split(key)
+    return AggKVCache(
+        k=jnp.zeros((batch, s_max, n_kv, dk), dtype),
+        v=jnp.zeros((batch, s_max, n_kv, dv), dtype),
+        bucket_of=jnp.zeros((batch, s_max), jnp.int32),
+        mean_k=jnp.zeros((batch, n_buckets, n_kv, dk), jnp.float32),
+        mean_v=jnp.zeros((batch, n_buckets, n_kv, dv), jnp.float32),
+        counts=jnp.zeros((batch, n_buckets), jnp.int32),
+        lsh_a=jax.random.normal(ka, (n_kv * dk, n_hashes), jnp.float32),
+        lsh_b=jax.random.uniform(
+            kb, (n_hashes,), minval=0.0, maxval=LSH_WIDTH
+        ),
+    )
+
+
+def _bucket_id(cache: AggKVCache, k_new: jax.Array) -> jax.Array:
+    """LSH bucket of new keys.  k_new: [B, Hkv, dk] -> [B] int32."""
+    b = k_new.shape[0]
+    flat = k_new.reshape(b, -1).astype(jnp.float32)
+    h = jnp.floor(
+        (flat @ cache.lsh_a + cache.lsh_b[None, :]) / LSH_WIDTH
+    ).astype(jnp.int32)
+    nh = h.shape[-1]
+    sig = jnp.sum(h.astype(jnp.uint32) * _PRIMES[:nh][None, :], axis=-1)
+    return (sig % jnp.uint32(cache.n_buckets)).astype(jnp.int32)
+
+
+def insert(
+    cache: AggKVCache, k_new: jax.Array, v_new: jax.Array, pos: jax.Array
+) -> AggKVCache:
+    """Insert one token per sequence: running-mean bucket update (Eq. 2).
+
+    k_new: [B, Hkv, dk]; v_new: [B, Hkv, dv]; pos: [B] int32.
+    """
+    bidx = _bucket_id(cache, k_new)                          # [B]
+    brange = jnp.arange(cache.k.shape[0])
+    k = cache.k.at[brange, pos].set(k_new.astype(cache.k.dtype))
+    v = cache.v.at[brange, pos].set(v_new.astype(cache.v.dtype))
+    bucket_of = cache.bucket_of.at[brange, pos].set(bidx)
+
+    cnt = cache.counts[brange, bidx].astype(jnp.float32)     # [B]
+    new_cnt = cnt + 1.0
+    mk_old = cache.mean_k[brange, bidx]                      # [B,Hkv,dk]
+    mv_old = cache.mean_v[brange, bidx]
+    mk = mk_old + (k_new.astype(jnp.float32) - mk_old) / new_cnt[:, None, None]
+    mv = mv_old + (v_new.astype(jnp.float32) - mv_old) / new_cnt[:, None, None]
+    return AggKVCache(
+        k=k, v=v, bucket_of=bucket_of,
+        mean_k=cache.mean_k.at[brange, bidx].set(mk),
+        mean_v=cache.mean_v.at[brange, bidx].set(mv),
+        counts=cache.counts.at[brange, bidx].set(new_cnt.astype(jnp.int32)),
+        lsh_a=cache.lsh_a, lsh_b=cache.lsh_b,
+    )
+
+
+def prefill(
+    cache: AggKVCache, ks: jax.Array, vs: jax.Array
+) -> AggKVCache:
+    """Bulk-build the aggregated cache from a prefilled K/V block.
+
+    ks: [B, S, Hkv, dk]; vs: [B, S, Hkv, dv] — vectorized §III-B generation:
+    bucket every position, then segment means per (batch, bucket).
+    """
+    bsz, s, hkv, dk = ks.shape
+    flat = ks.reshape(bsz, s, hkv * dk).astype(jnp.float32)
+    h = jnp.floor(
+        (flat @ cache.lsh_a + cache.lsh_b[None, None, :]) / LSH_WIDTH
+    ).astype(jnp.int32)
+    nh = h.shape[-1]
+    sig = jnp.sum(
+        h.astype(jnp.uint32) * _PRIMES[:nh][None, None, :], axis=-1
+    )
+    bidx = (sig % jnp.uint32(cache.n_buckets)).astype(jnp.int32)  # [B,S]
+
+    def per_seq(b_ids, k_seq, v_seq):
+        counts = jax.ops.segment_sum(
+            jnp.ones((s,), jnp.float32), b_ids,
+            num_segments=cache.n_buckets,
+        )
+        mk = jax.ops.segment_sum(
+            k_seq.reshape(s, -1).astype(jnp.float32), b_ids,
+            num_segments=cache.n_buckets,
+        ) / jnp.maximum(counts[:, None], 1.0)
+        mv = jax.ops.segment_sum(
+            v_seq.reshape(s, -1).astype(jnp.float32), b_ids,
+            num_segments=cache.n_buckets,
+        ) / jnp.maximum(counts[:, None], 1.0)
+        return counts.astype(jnp.int32), mk, mv
+
+    counts, mk, mv = jax.vmap(per_seq)(bidx, ks, vs)
+    s_max = cache.k.shape[1]
+    k_full = cache.k.at[:, :s].set(ks.astype(cache.k.dtype))
+    v_full = cache.v.at[:, :s].set(vs.astype(cache.v.dtype))
+    return AggKVCache(
+        k=k_full, v=v_full,
+        bucket_of=cache.bucket_of.at[:, :s].set(bidx),
+        mean_k=mk.reshape(cache.mean_k.shape),
+        mean_v=mv.reshape(cache.mean_v.shape),
+        counts=counts,
+        lsh_a=cache.lsh_a, lsh_b=cache.lsh_b,
+    )
+
+
+@partial(jax.jit, static_argnames=("refine_frac", "scale"))
+def decode_attend(
+    q: jax.Array, cache: AggKVCache, pos: jax.Array, *,
+    refine_frac: float, scale: float,
+) -> jax.Array:
+    """Two-stage aggregated attention for one decode step.
+
+    q: [B, H, dk]; pos: [B] current positions (valid_len = pos + 1).
+    Returns [B, H, dv] (float32).
+    """
+    n_refine = max(1, int(math.ceil(refine_frac * cache.n_buckets)))
+
+    def per_seq(q_b, k_b, v_b, bucket_b, mk_b, mv_b, cnt_b, pos_b):
+        # stage 1: correlations = max-over-heads centroid logit (Def. 4)
+        hq, dk = q_b.shape
+        hkv = mk_b.shape[1]
+        group = hq // hkv
+        qg = q_b.reshape(hkv, group, dk).astype(jnp.float32)
+        cent_logits = jnp.einsum(
+            "kgd,Kkd->kgK", qg, mk_b.astype(jnp.float32)
+        ) * scale
+        corr = jnp.max(cent_logits.reshape(hkv * group, -1), axis=0)  # [K]
+        corr = jnp.where(cnt_b > 0, corr, -jnp.inf)
+        # stage 2 selection: top-correlated buckets re-attended exactly
+        _, top_idx = jax.lax.top_k(corr, n_refine)
+        refined = jnp.zeros((cache.n_buckets,), bool).at[top_idx].set(True)
+        refined = refined & (cnt_b > 0)
+        return kernel_ops.aggregated_attention_decode(
+            q_b, k_b, v_b, bucket_b, mk_b, mv_b, cnt_b, refined,
+            scale=scale, valid_len=pos_b + 1,
+        )
+
+    return jax.vmap(per_seq)(
+        q, cache.k, cache.v, cache.bucket_of, cache.mean_k, cache.mean_v,
+        cache.counts, pos,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Bucket-major cache (§Perf optimized layout — beyond-paper)
+#
+# The flat cache above keeps tokens in insertion order, so stage 2 must READ
+# every token and mask — O(S) bytes/step, which defeats the paper's skip.
+# The bucket-major layout preallocates C slots per bucket ([K, C, Hkv, d])
+# and writes each token into its own bucket's next slot; stage 2 then
+# *gathers only the refined buckets* — O(K + eps*S) bytes/step, the
+# TPU-idiomatic block-sparse form of "process only these parts of the
+# input".  Bucket overflow (count > C) degrades gracefully: the token still
+# updates the running centroid (information kept, per the paper) but has no
+# exact slot; with C = 2x compression and LSH balance this is rare.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BucketMajorKVCache:
+    """Per-layer aggregated KV cache in bucket-major layout.
+
+    Overflow tokens (bucket count > capacity) keep a separate running
+    *overflow centroid* per bucket, so a refined bucket contributes its
+    exact slots PLUS the count-weighted overflow aggregate — no token's
+    information is ever dropped (the paper's differentiator vs sampling).
+    """
+
+    k: jax.Array           # [B, K, C, Hkv, dk]
+    v: jax.Array           # [B, K, C, Hkv, dv]
+    mean_k: jax.Array      # [B, K, Hkv, dk]   mean over ALL bucket tokens
+    mean_v: jax.Array      # [B, K, Hkv, dv]
+    over_k: jax.Array      # [B, K, Hkv, dk]   mean over overflow tokens
+    over_v: jax.Array      # [B, K, Hkv, dv]
+    counts: jax.Array      # [B, K] int32 (total inserts, incl. overflow)
+    lsh_a: jax.Array
+    lsh_b: jax.Array
+
+    def tree_flatten(self):
+        return (
+            self.k, self.v, self.mean_k, self.mean_v, self.over_k,
+            self.over_v, self.counts, self.lsh_a, self.lsh_b,
+        ), None
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+    @property
+    def n_buckets(self) -> int:
+        return self.mean_k.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[2]
+
+
+def init_bucket_major(
+    key: jax.Array, *, batch: int, s_max: int, n_kv: int, dk: int,
+    dv: int | None = None, compression: int, dtype=jnp.bfloat16,
+    n_hashes: int = 4, slack: int = 2,
+) -> BucketMajorKVCache:
+    dv = dk if dv is None else dv
+    n_buckets = max(1, s_max // compression)
+    cap = compression * slack
+    ka, kb = jax.random.split(key)
+    return BucketMajorKVCache(
+        k=jnp.zeros((batch, n_buckets, cap, n_kv, dk), dtype),
+        v=jnp.zeros((batch, n_buckets, cap, n_kv, dv), dtype),
+        mean_k=jnp.zeros((batch, n_buckets, n_kv, dk), jnp.float32),
+        mean_v=jnp.zeros((batch, n_buckets, n_kv, dv), jnp.float32),
+        over_k=jnp.zeros((batch, n_buckets, n_kv, dk), jnp.float32),
+        over_v=jnp.zeros((batch, n_buckets, n_kv, dv), jnp.float32),
+        counts=jnp.zeros((batch, n_buckets), jnp.int32),
+        lsh_a=jax.random.normal(ka, (n_kv * dk, n_hashes), jnp.float32),
+        lsh_b=jax.random.uniform(
+            kb, (n_hashes,), minval=0.0, maxval=LSH_WIDTH
+        ),
+    )
+
+
+def insert_bucket_major(
+    cache: BucketMajorKVCache, k_new: jax.Array, v_new: jax.Array,
+) -> BucketMajorKVCache:
+    """Insert one token per sequence.  k_new: [B, Hkv, dk]."""
+    bidx = _bucket_id(cache, k_new)                       # [B]
+    brange = jnp.arange(cache.k.shape[0])
+    cnt = cache.counts[brange, bidx]                      # [B]
+    slot = jnp.minimum(cnt, cache.capacity - 1)           # overflow clamps
+    in_cap = cnt < cache.capacity
+    k_store = jnp.where(
+        in_cap[:, None, None], k_new.astype(cache.k.dtype),
+        cache.k[brange, bidx, slot],
+    )
+    v_store = jnp.where(
+        in_cap[:, None, None], v_new.astype(cache.v.dtype),
+        cache.v[brange, bidx, slot],
+    )
+    newc = cnt.astype(jnp.float32) + 1.0
+    mk = cache.mean_k[brange, bidx]
+    mv = cache.mean_v[brange, bidx]
+    mk = mk + (k_new.astype(jnp.float32) - mk) / newc[:, None, None]
+    mv = mv + (v_new.astype(jnp.float32) - mv) / newc[:, None, None]
+    # overflow centroid: running mean over tokens beyond capacity
+    over_cnt = jnp.maximum(
+        cnt.astype(jnp.float32) - (cache.capacity - 1), 1.0
+    )
+    ok = cache.over_k[brange, bidx]
+    ov = cache.over_v[brange, bidx]
+    ok_new = ok + (k_new.astype(jnp.float32) - ok) / over_cnt[:, None, None]
+    ov_new = ov + (v_new.astype(jnp.float32) - ov) / over_cnt[:, None, None]
+    keep = in_cap[:, None, None]
+    return BucketMajorKVCache(
+        k=cache.k.at[brange, bidx, slot].set(k_store),
+        v=cache.v.at[brange, bidx, slot].set(v_store),
+        mean_k=cache.mean_k.at[brange, bidx].set(mk),
+        mean_v=cache.mean_v.at[brange, bidx].set(mv),
+        over_k=cache.over_k.at[brange, bidx].set(
+            jnp.where(keep, ok, ok_new)
+        ),
+        over_v=cache.over_v.at[brange, bidx].set(
+            jnp.where(keep, ov, ov_new)
+        ),
+        counts=cache.counts.at[brange, bidx].set(newc.astype(jnp.int32)),
+        lsh_a=cache.lsh_a, lsh_b=cache.lsh_b,
+    )
+
+
+@partial(jax.jit, static_argnames=("refine_frac", "scale"))
+def decode_attend_bucket_major(
+    q: jax.Array, cache: BucketMajorKVCache, *,
+    refine_frac: float, scale: float,
+) -> jax.Array:
+    """Two-stage attention reading only centroids + refined buckets.
+
+    q: [B, H, dk] -> [B, H, dv] float32.  Bytes/step: O(K + eps*S).
+    """
+    n_refine = max(1, int(math.ceil(refine_frac * cache.n_buckets)))
+    cap = cache.capacity
+
+    def per_seq(q_b, k_b, v_b, mk_b, mv_b, ok_b, ov_b, cnt_b):
+        hq, dk = q_b.shape
+        hkv = mk_b.shape[1]
+        group = hq // hkv
+        qg = q_b.reshape(hkv, group, dk).astype(jnp.float32)
+        # stage 1: centroid logits = correlations (Def. 4)
+        cent_logits = jnp.einsum(
+            "kgd,Kkd->kgK", qg, mk_b.astype(jnp.float32)
+        ) * scale                                          # [hkv,g,K]
+        corr = jnp.max(cent_logits.reshape(-1, cent_logits.shape[-1]), 0)
+        corr = jnp.where(cnt_b > 0, corr, -jnp.inf)
+        _, top = jax.lax.top_k(corr, n_refine)             # [R]
+
+        # stage 2: gather ONLY the refined buckets' slots
+        k_sel = k_b[top]                                   # [R,C,hkv,dk]
+        v_sel = v_b[top]                                   # [R,C,hkv,dv]
+        cnt_sel = cnt_b[top]                               # [R]
+        slot_live = (
+            jnp.arange(cap)[None, :] < jnp.minimum(cnt_sel, cap)[:, None]
+        ) & (cnt_sel > 0)[:, None]                         # [R,C]
+        tok_logits = jnp.einsum(
+            "kgd,RCkd->kgRC", qg, k_sel.astype(jnp.float32)
+        ) * scale
+        tok_logits = jnp.where(
+            slot_live[None, None], tok_logits, -jnp.inf
+        )
+
+        # refined buckets' overflow centroids (tokens beyond capacity)
+        over_cnt = jnp.maximum(cnt_sel - cap, 0).astype(jnp.float32)
+        ov_logits = jnp.einsum(
+            "kgd,Rkd->kgR", qg, ok_b[top].astype(jnp.float32)
+        ) * scale + jnp.log(jnp.maximum(over_cnt, 1.0))[None, None]
+        ov_logits = jnp.where(
+            (over_cnt > 0)[None, None], ov_logits, -jnp.inf
+        )
+
+        # centroids for unrefined buckets, count-weighted
+        refined_mask = jnp.zeros((cache.n_buckets,), bool).at[top].set(True)
+        cent_live = (~refined_mask) & (cnt_b > 0)
+        cent_l = jnp.where(cent_live[None, None], cent_logits, -jnp.inf)
+        cent_l = cent_l + jnp.where(
+            cent_live, jnp.log(jnp.maximum(cnt_b.astype(jnp.float32), 1.0)),
+            0.0,
+        )[None, None]
+
+        # merged softmax over [refined slots ; overflow ; centroids]
+        flat_tok = tok_logits.reshape(hkv, group, -1)
+        all_l = jnp.concatenate([flat_tok, ov_logits, cent_l], axis=-1)
+        m = jnp.max(all_l, axis=-1, keepdims=True)
+        w = jnp.exp(all_l - m)
+        w = jnp.where(jnp.isfinite(all_l), w, 0.0)
+        denom = jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-30)
+        vals = jnp.concatenate(
+            [
+                v_sel.astype(jnp.float32).transpose(2, 0, 1, 3).reshape(
+                    hkv, -1, v_sel.shape[-1]
+                ),
+                ov_b[top].astype(jnp.float32).transpose(1, 0, 2),
+                mv_b.astype(jnp.float32).transpose(1, 0, 2),
+            ],
+            axis=1,
+        )                                              # [hkv, R*C+R+K, dv]
+        out = jnp.einsum("kgT,kTd->kgd", w / denom, vals)
+        return out.reshape(hq, -1)
+
+    return jax.vmap(per_seq)(
+        q, cache.k, cache.v, cache.mean_k, cache.mean_v, cache.over_k,
+        cache.over_v, cache.counts,
+    )

@@ -1,0 +1,516 @@
+"""Shared transformer layers: norms, linears, RoPE/M-RoPE, GQA attention, MLP.
+
+Parameters are plain nested dicts of jax.Arrays; initializer functions return
+(params) and the sharding rules in ``repro.parallel.sharding`` map parameter
+paths to PartitionSpecs.  All functions take an explicit ``cfg`` and are pure.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def checkpointed_scan(step, init, xs, *, chunk: int = 128):
+    """lax.scan with O(S/chunk + chunk) backward memory.
+
+    Recurrences over thousands of timesteps (sLSTM/mLSTM) cannot afford the
+    per-step carry stash lax.scan's VJP keeps; chunking the scan and
+    rematerializing each chunk bounds the stash to chunk boundaries plus
+    one in-flight chunk.
+    """
+    s = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    c = min(chunk, s)
+    while s % c:
+        c //= 2
+
+    def reshape(t):
+        return t.reshape((s // c, c) + t.shape[1:])
+
+    xs_c = jax.tree_util.tree_map(reshape, xs)
+
+    @jax.checkpoint
+    def outer(carry, xc):
+        carry, ys = jax.lax.scan(step, carry, xc)
+        return carry, ys
+
+    carry, ys_c = jax.lax.scan(outer, init, xs_c)
+    ys = jax.tree_util.tree_map(
+        lambda t: t.reshape((s,) + t.shape[2:]), ys_c
+    )
+    return carry, ys
+
+
+def dense_init(key, d_in, d_out, *, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def rmsnorm_init(d, *, dtype):
+    return jnp.ones((d,), dtype=dtype)
+
+
+def rmsnorm(x, w, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """[head_dim/2] inverse frequencies."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    angles = angles[..., None, :]                       # [..., S, 1, hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, theta: float,
+    sections=None,
+) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): head_dim/2 freq slots split into
+    (temporal, height, width) sections, each rotated by its own position id.
+
+    x: [B, S, H, hd]; positions: [3, B, S] int32 (t/h/w grids; equal for
+    pure-text tokens, which makes M-RoPE collapse to standard RoPE).
+    Default section split matches Qwen2-VL's 16/24/24 of 64 = (1/4, 3/8, 3/8).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    if sections is None:
+        s1 = half // 4
+        s2 = (half - s1) // 2
+        sections = (s1, s2, half - s1 - s2)
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(hd, theta)                       # [half]
+    # section id of each freq slot -> which of t/h/w drives it
+    sect = jnp.concatenate(
+        [
+            jnp.full((s,), i, dtype=jnp.int32)
+            for i, s in enumerate(sections)
+        ]
+    )                                                   # [half]
+    # positions[sect] per slot: [B, S, half]
+    pos = jnp.moveaxis(positions, 0, -1)                # [B, S, 3]
+    pos_per_slot = jnp.take_along_axis(
+        pos.astype(jnp.float32),
+        jnp.broadcast_to(sect[None, None, :], pos.shape[:2] + (half,)),
+        axis=-1,
+    )
+    angles = pos_per_slot * freqs[None, None, :]        # [B, S, half]
+    angles = angles[..., None, :]                       # [B, S, 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg, *, dtype) -> Params:
+    """Weights for (possibly grouped-query) attention."""
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "wq": dense_init(ks[0], d, h * hd, dtype=dtype),
+        "wk": dense_init(ks[1], d, hkv * hd, dtype=dtype),
+        "wv": dense_init(ks[2], d, hkv * hd, dtype=dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype=dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype=dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg, positions, mrope_positions=None):
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.rope_theta)
+        k = apply_mrope(k, mrope_positions, cfg.rope_theta)
+    elif cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _bw_chunks(s, t, q_chunk, kv_chunk, causal, window):
+    qc = q_chunk
+    while s % qc:
+        qc //= 2
+    kc = kv_chunk
+    while t % kc:
+        kc //= 2
+
+    def block_live(qi, ki):
+        q_lo, q_hi = qi * qc, qi * qc + qc - 1
+        k_lo, k_hi = ki * kc, ki * kc + kc - 1
+        if causal and k_lo > q_hi:
+            return False
+        if window is not None and k_hi <= q_lo - window:
+            return False
+        return True
+
+    pairs = [
+        (qi, ki)
+        for qi in range(s // qc) for ki in range(t // kc)
+        if block_live(qi, ki)
+    ]
+    return qc, kc, jnp.asarray(pairs, dtype=jnp.int32)
+
+
+def _bw_mask(qi, ki, qc, kc, causal, window):
+    gq = qi * qc + jnp.arange(qc)
+    gk = ki * kc + jnp.arange(kc)
+    mask = jnp.ones((qc, kc), bool)
+    if causal:
+        mask &= gk[None, :] <= gq[:, None]
+    if window is not None:
+        mask &= gk[None, :] > gq[:, None] - window
+    return mask
+
+
+def _bw_forward(q, k, v, scale, causal, window, q_chunk, kv_chunk):
+    """Returns (out [b,s,hkv,g,dv] f32, lse [b,hkv,g,s] f32)."""
+    b, s, hkv, g, hd = q.shape
+    t = k.shape[1]
+    dv = v.shape[-1]
+    qc, kc, pair_arr = _bw_chunks(s, t, q_chunk, kv_chunk, causal, window)
+
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    m0 = jnp.full((b, hkv, g, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s), jnp.float32)
+    a0 = jnp.zeros((b, s, hkv, g, dv), jnp.float32)
+
+    def body(carry, pair):
+        m, l, acc = carry
+        qi, ki = pair[0], pair[1]
+        qblk = jax.lax.dynamic_slice_in_dim(qf, qi * qc, qc, axis=1)
+        kblk = jax.lax.dynamic_slice_in_dim(kf, ki * kc, kc, axis=1)
+        vblk = jax.lax.dynamic_slice_in_dim(vf, ki * kc, kc, axis=1)
+        logits = jnp.einsum("bskgd,btkd->bkgst", qblk, kblk) * scale
+        mask = _bw_mask(qi, ki, qc, kc, causal, window)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+
+        m_blk = jnp.max(logits, axis=-1)
+        m_old = jax.lax.dynamic_slice_in_dim(m, qi * qc, qc, axis=3)
+        l_old = jax.lax.dynamic_slice_in_dim(l, qi * qc, qc, axis=3)
+        a_old = jax.lax.dynamic_slice_in_dim(acc, qi * qc, qc, axis=1)
+        m_new = jnp.maximum(m_old, m_blk)
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        l_new = l_old * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bskgd", p, vblk)
+        a_new = a_old * jnp.moveaxis(alpha, 3, 1)[..., None] + pv
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, qi * qc, axis=3)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, qi * qc, axis=3)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new, qi * qc, 1)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), pair_arr)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = acc / jnp.maximum(jnp.moveaxis(l, 3, 1)[..., None], 1e-30)
+    return out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _bw_sdpa(q, k, v, scale, causal, window, q_chunk, kv_chunk):
+    out, _ = _bw_forward(q, k, v, scale, causal, window, q_chunk, kv_chunk)
+    return out.astype(q.dtype)
+
+
+def _bw_sdpa_fwd(q, k, v, scale, causal, window, q_chunk, kv_chunk):
+    out, lse = _bw_forward(q, k, v, scale, causal, window, q_chunk, kv_chunk)
+    return out.astype(q.dtype), (q, k, v, out, lse)
+
+
+def _bw_sdpa_bwd(scale, causal, window, q_chunk, kv_chunk, res, dout):
+    """FlashAttention-2-style backward: recompute each live block from the
+    saved logsumexp — memory stays O(S), never O(S^2)."""
+    q, k, v, out, lse = res
+    b, s, hkv, g, hd = q.shape
+    t = k.shape[1]
+    dv = v.shape[-1]
+    qc, kc, pair_arr = _bw_chunks(s, t, q_chunk, kv_chunk, causal, window)
+
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    doutf = dout.astype(jnp.float32)
+    # delta term: rowsum(dout * out)  [b,hkv,g,s]
+    delta = jnp.moveaxis(jnp.sum(doutf * out, axis=-1), 1, 3)
+
+    dq0 = jnp.zeros_like(qf)
+    dk0 = jnp.zeros_like(kf)
+    dv0 = jnp.zeros_like(vf)
+
+    def body(carry, pair):
+        dq, dk, dvac = carry
+        qi, ki = pair[0], pair[1]
+        qblk = jax.lax.dynamic_slice_in_dim(qf, qi * qc, qc, axis=1)
+        kblk = jax.lax.dynamic_slice_in_dim(kf, ki * kc, kc, axis=1)
+        vblk = jax.lax.dynamic_slice_in_dim(vf, ki * kc, kc, axis=1)
+        lse_q = jax.lax.dynamic_slice_in_dim(lse, qi * qc, qc, axis=3)
+        dlt_q = jax.lax.dynamic_slice_in_dim(delta, qi * qc, qc, axis=3)
+        do_q = jax.lax.dynamic_slice_in_dim(doutf, qi * qc, qc, axis=1)
+
+        logits = jnp.einsum("bskgd,btkd->bkgst", qblk, kblk) * scale
+        mask = _bw_mask(qi, ki, qc, kc, causal, window)
+        p = jnp.exp(logits - lse_q[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)      # [b,k,g,qc,kc]
+
+        dv_blk = jnp.einsum("bkgst,bskgd->btkd", p, do_q)
+        dp = jnp.einsum("bskgd,btkd->bkgst", do_q, vblk)
+        ds = p * (dp - dlt_q[..., None]) * scale
+        dq_blk = jnp.einsum("bkgst,btkd->bskgd", ds, kblk)
+        dk_blk = jnp.einsum("bkgst,bskgd->btkd", ds, qblk)
+
+        dq = jax.lax.dynamic_update_slice_in_dim(
+            dq,
+            jax.lax.dynamic_slice_in_dim(dq, qi * qc, qc, 1) + dq_blk,
+            qi * qc, 1,
+        )
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk,
+            jax.lax.dynamic_slice_in_dim(dk, ki * kc, kc, 1) + dk_blk,
+            ki * kc, 1,
+        )
+        dvac = jax.lax.dynamic_update_slice_in_dim(
+            dvac,
+            jax.lax.dynamic_slice_in_dim(dvac, ki * kc, kc, 1) + dv_blk,
+            ki * kc, 1,
+        )
+        return (dq, dk, dvac), None
+
+    (dq, dk, dvac), _ = jax.lax.scan(body, (dq0, dk0, dv0), pair_arr)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dvac.astype(v.dtype)
+
+
+_bw_sdpa.defvjp(_bw_sdpa_fwd, _bw_sdpa_bwd)
+
+
+def blockwise_sdpa(
+    q, k, v, *, scale, causal, window: int | None = None,
+    q_chunk: int = 256, kv_chunk: int = 512,
+):
+    """Flash-style blockwise attention with static causal block skipping.
+
+    q: [B,S,Hkv,G,hd]; k/v: [B,T,Hkv,hd] (dv may differ from hd).  Memory is
+    O(S + chunk^2) in forward AND backward (custom VJP recomputes blocks
+    from the saved logsumexp, FlashAttention-2 style); block pairs fully
+    masked by causality/windowing are skipped at trace time, so compiled
+    FLOPs match the live mask.  Returns [B,S,H,dv].
+    """
+    b, s, hkv, g, hd = q.shape
+    dv = v.shape[-1]
+    out = _bw_sdpa(q, k, v, scale, causal, window, q_chunk, kv_chunk)
+    return out.reshape(b, s, hkv * g, dv)
+
+
+# full-sequence attention switches to the blockwise path above this size
+_BLOCKWISE_THRESHOLD = 2048
+
+
+def _sdpa(q, k, v, mask, *, scale):
+    """[B,S,H,hd] x [B,T,Hkv,hd] -> [B,S,H,hd] with GQA head grouping."""
+    b, s, h, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, s, hkv, group, hd)
+    logits = jnp.einsum(
+        "bskgd,btkd->bkgst", qg.astype(jnp.float32),
+        k.astype(jnp.float32),
+    ) * scale
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bkgst,btkd->bskgd", probs, v.astype(jnp.float32)
+    )
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def causal_mask(s: int, dtype=jnp.bool_) -> jax.Array:
+    return jnp.tril(jnp.ones((s, s), dtype))
+
+
+def sliding_window_mask(s: int, window: int) -> jax.Array:
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    return (j <= i) & (j > i - window)
+
+
+def attention(
+    p: Params, x: jax.Array, cfg, *, positions, causal=True,
+    window: int | None = None, mrope_positions=None, segment_mask=None,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions, mrope_positions)
+    if s >= _BLOCKWISE_THRESHOLD and segment_mask is None:
+        hkv = cfg.n_kv_heads
+        group = cfg.n_heads // hkv
+        qg = q.reshape(b, s, hkv, group, cfg.head_dim)
+        out = blockwise_sdpa(
+            qg, k, v, scale=1.0 / math.sqrt(cfg.head_dim),
+            causal=causal, window=window,
+        )
+        return out.reshape(b, s, -1) @ p["wo"]
+    if window is not None:
+        mask = sliding_window_mask(s, window)[None]
+    elif causal:
+        mask = causal_mask(s)[None]
+    else:
+        mask = jnp.ones((1, s, s), jnp.bool_)
+    if segment_mask is not None:
+        mask = mask & segment_mask
+    out = _sdpa(q, k, v, mask, scale=1.0 / math.sqrt(cfg.head_dim))
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def cross_attention_init(key, cfg, *, dtype) -> Params:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * hd, dtype=dtype),
+        "wk": dense_init(ks[1], d, h * hd, dtype=dtype),
+        "wv": dense_init(ks[2], d, h * hd, dtype=dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype=dtype),
+    }
+
+
+def cross_attention(p: Params, x, memory, cfg) -> jax.Array:
+    """Decoder-to-encoder attention (no RoPE, no mask)."""
+    b, s, _ = x.shape
+    t = memory.shape[1]
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (memory @ p["wk"]).reshape(b, t, h, hd)
+    v = (memory @ p["wv"]).reshape(b, t, h, hd)
+    if max(s, t) >= _BLOCKWISE_THRESHOLD:
+        out = blockwise_sdpa(
+            q.reshape(b, s, h, 1, hd), k, v,
+            scale=1.0 / math.sqrt(hd), causal=False,
+        )
+    else:
+        out = _sdpa(q, k, v, None, scale=1.0 / math.sqrt(hd))
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+# decode (single-token) attention with a KV cache ---------------------------
+
+def attention_decode(
+    p: Params, x: jax.Array, cfg, *, cache_k, cache_v, pos,
+    write_pos=None, mrope_positions=None,
+):
+    """One decode step.  x: [B,1,d]; cache_k/v: [B,S,Hkv,hd]; pos: [B] int32.
+
+    ``pos`` is the absolute token position (drives RoPE and the validity
+    mask); ``write_pos`` is the cache slot to write (defaults to pos; ring
+    buffers pass ``pos % ring_size``).  With a ring buffer every slot is
+    valid once ``pos >= ring_size`` — the mask below covers both cases.
+    """
+    b = x.shape[0]
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s_max = cache_k.shape[1]
+    if write_pos is None:
+        write_pos = pos
+    q, k_new, v_new = _project_qkv(
+        p, x, cfg, pos[:, None], mrope_positions
+    )
+    cache_k = jax.vmap(
+        lambda c, upd, i: jax.lax.dynamic_update_slice(c, upd, (i, 0, 0))
+    )(cache_k, k_new, write_pos)
+    cache_v = jax.vmap(
+        lambda c, upd, i: jax.lax.dynamic_update_slice(c, upd, (i, 0, 0))
+    )(cache_v, v_new, write_pos)
+
+    group = h // hkv
+    qg = q.reshape(b, 1, hkv, group, hd)
+    logits = jnp.einsum(
+        "bskgd,btkd->bkgst", qg.astype(jnp.float32),
+        cache_k.astype(jnp.float32),
+    ) / math.sqrt(hd)
+    t_idx = jnp.arange(s_max)[None, :]
+    # slots written so far: ring buffers have min(pos+1, s_max) live slots
+    n_live = jnp.minimum(pos[:, None] + 1, s_max)
+    valid = t_idx < n_live
+    logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, cache_v.astype(jnp.float32))
+    out = out.reshape(b, 1, h * hd).astype(x.dtype) @ p["wo"]
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, *, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype=dtype),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    """SwiGLU feed-forward."""
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def gelu_mlp_init(key, d_model, d_ff, *, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "w_up": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+        "w_down": dense_init(ks[1], d_ff, d_model, dtype=dtype),
+    }
+
+
+def gelu_mlp(p: Params, x: jax.Array) -> jax.Array:
+    """Plain GELU feed-forward (whisper-style)."""
+    return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]

@@ -1,0 +1,148 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — train path + absorbed decode.
+
+Train/prefill materializes per-head keys/values from the kv latent; decode
+uses the absorbed form: the KV cache holds only (c_kv [S, r], k_rope [S, 64])
+and W_UK/W_UV are folded into the query/output, so decode attention is
+effectively MQA with (r + rope) = 576-dim keys and r = 512-dim values.
+
+That absorbed form is also where the paper's technique plugs in: aggregated
+KV buckets live in the *latent* space (DESIGN.md §5), so centroid storage
+and stage-1 scoring cost r/d of full-width aggregation.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Params = dict[str, Any]
+
+
+def mla_init(key, cfg, *, dtype) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "w_dq": layers.dense_init(ks[0], d, qr, dtype=dtype),
+        "q_norm": layers.rmsnorm_init(qr, dtype=dtype),
+        "w_uq": layers.dense_init(ks[1], qr, h * (dn + dr), dtype=dtype),
+        "w_dkv": layers.dense_init(ks[2], d, kvr, dtype=dtype),
+        "kv_norm": layers.rmsnorm_init(kvr, dtype=dtype),
+        "w_kr": layers.dense_init(ks[3], d, dr, dtype=dtype),
+        "w_uk": layers.dense_init(ks[4], kvr, h * dn, dtype=dtype),
+        "w_uv": layers.dense_init(ks[5], kvr, h * dv, dtype=dtype),
+        "wo": layers.dense_init(ks[6], h * dv, d, dtype=dtype),
+    }
+    return p
+
+
+def _mla_q(p, x, cfg, positions):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    q = layers.rmsnorm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps) @ p["w_uq"]
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(p: Params, x: jax.Array, cfg, *, positions) -> jax.Array:
+    """Full-sequence MLA (training / prefill).  x: [B, S, d]."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = (
+        cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    )
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+
+    c_kv = layers.rmsnorm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)
+    k_rope = layers.apply_rope(
+        (x @ p["w_kr"]).reshape(b, s, 1, dr), positions, cfg.rope_theta
+    )                                                    # [B,S,1,dr] shared
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, dn)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, h, dv)
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    if s >= layers._BLOCKWISE_THRESHOLD:
+        # fold the shared rope key into per-head keys and run the blockwise
+        # (flash-style) path: q/k are [B,S,H,dn+dr], values [B,S,H,dv]
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], axis=-1
+        )
+        out = layers.blockwise_sdpa(
+            q_full.reshape(b, s, h, 1, dn + dr), k_full, v,
+            scale=scale, causal=True,
+        )
+        return out.reshape(b, s, h * dv).astype(x.dtype) @ p["wo"]
+
+    logits = (
+        jnp.einsum(
+            "bshd,bthd->bhst", q_nope.astype(jnp.float32),
+            k_nope.astype(jnp.float32),
+        )
+        + jnp.einsum(
+            "bshd,btkd->bhst", q_rope.astype(jnp.float32),
+            k_rope.astype(jnp.float32),
+        )
+    ) * scale
+    mask = layers.causal_mask(s)[None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h * dv).astype(x.dtype) @ p["wo"]
+
+
+def mla_decode(
+    p: Params, x: jax.Array, cfg, *, cache_c, cache_kr, pos,
+):
+    """Absorbed single-token decode.
+
+    x: [B,1,d]; cache_c: [B,S,r]; cache_kr: [B,S,dr]; pos: [B].
+    Returns (out [B,1,d], new_cache_c, new_cache_kr).
+    """
+    b = x.shape[0]
+    h, dn, dr, dv = (
+        cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    )
+    r = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(p, x, cfg, pos[:, None])     # [B,1,H,*]
+
+    c_new = layers.rmsnorm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)
+    kr_new = layers.apply_rope(
+        (x @ p["w_kr"]).reshape(b, 1, 1, dr), pos[:, None], cfg.rope_theta
+    ).reshape(b, 1, dr)
+    cache_c = jax.vmap(
+        lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0))
+    )(cache_c, c_new, pos)
+    cache_kr = jax.vmap(
+        lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0))
+    )(cache_kr, kr_new, pos)
+
+    # Absorb W_UK into the query: q_c [B,1,H,r]
+    w_uk = p["w_uk"].reshape(r, h, dn)
+    q_c = jnp.einsum(
+        "bshd,rhd->bshr", q_nope.astype(jnp.float32),
+        w_uk.astype(jnp.float32),
+    )
+    scale = 1.0 / math.sqrt(dn + dr)
+    logits = (
+        jnp.einsum("bshr,btr->bhst", q_c, cache_c.astype(jnp.float32))
+        + jnp.einsum(
+            "bshd,btd->bhst", q_rope.astype(jnp.float32),
+            cache_kr.astype(jnp.float32),
+        )
+    ) * scale
+    s_max = cache_c.shape[1]
+    valid = jnp.arange(s_max)[None, :] <= pos[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out_c = jnp.einsum("bhst,btr->bshr", probs, cache_c.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(r, h, dv)
+    out = jnp.einsum("bshr,rhd->bshd", out_c, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * dv).astype(x.dtype) @ p["wo"]
+    return out, cache_c, cache_kr

@@ -1,0 +1,456 @@
+"""Public model API: init / train_loss / prefill / serve_step per ModelConfig.
+
+The stack layout (head blocks + scanned units + tail blocks + shared-attn
+store) is documented in transformer.py.  All entry points are pure functions
+of (params, inputs[, caches]) so the launch layer can jit/lower them with
+explicit shardings.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, transformer
+from repro.models.transformer import NO_PARALLEL, ParallelContext
+
+Params = dict[str, Any]
+
+
+def _dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def padded_vocab(cfg) -> int:
+    """Vocab rounded up to a multiple of 256 so the embedding table and the
+    logits shard cleanly over the model axis (MaxText-style padding; padded
+    ids are masked to -inf in the logits)."""
+    return -(-cfg.vocab_size // 256) * 256
+
+
+def _mask_pad_logits(logits, cfg):
+    v = logits.shape[-1]
+    if v == cfg.vocab_size:
+        return logits
+    live = jnp.arange(v) < cfg.vocab_size
+    return jnp.where(live, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+def _stack_layout(cfg):
+    """(head_kinds, pattern, n_units, tail_kinds) for the decoder stack."""
+    kinds = cfg.block_kinds()
+    head = kinds[: cfg.first_k_dense]
+    rest = kinds[cfg.first_k_dense:]
+    pat = tuple(cfg.pattern)
+    n_units = len(rest) // len(pat)
+    tail = rest[n_units * len(pat):]
+    return head, pat, n_units, tail
+
+
+def _sinusoidal(positions, d, dtype):
+    """Whisper-style sinusoidal position embedding. positions [B,S] -> [B,S,d]."""
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg) -> Params:
+    dtype = _dtype_of(cfg)
+    head, pat, n_units, tail = _stack_layout(cfg)
+    keys = jax.random.split(key, 8)
+
+    vpad = padded_vocab(cfg)
+    p: Params = {
+        "embed": (
+            jax.random.normal(keys[0], (vpad, cfg.d_model)) * 0.02
+        ).astype(dtype),
+        "final_norm": layers.rmsnorm_init(cfg.d_model, dtype=dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_init(
+            keys[1], cfg.d_model, vpad, dtype=dtype
+        )
+
+    # head (unrolled, dense-FFN) blocks
+    p["head_blocks"] = {
+        str(i): transformer.block_init(
+            jax.random.fold_in(keys[2], i), cfg, kind, dtype=dtype,
+            is_head=True,
+        )
+        for i, kind in enumerate(head)
+    }
+
+    # scanned units: stacked params [n_units, ...]
+    def unit_init(k):
+        unit = {}
+        for i, kind in enumerate(pat):
+            if kind == "shared_attn":
+                continue  # weights live in the shared store
+            unit[f"b{i}"] = transformer.block_init(
+                jax.random.fold_in(k, i), cfg, kind, dtype=dtype
+            )
+        return unit
+
+    if n_units > 0:
+        unit_keys = jax.random.split(keys[3], n_units)
+        p["units"] = jax.vmap(unit_init)(unit_keys)
+    else:
+        p["units"] = {}
+
+    p["tail_blocks"] = {
+        str(i): transformer.block_init(
+            jax.random.fold_in(keys[4], i), cfg, kind, dtype=dtype
+        )
+        for i, kind in enumerate(tail)
+        if kind != "shared_attn"
+    }
+
+    if "shared_attn" in cfg.block_kinds():
+        p["shared_attn"] = transformer.block_init(
+            keys[5], cfg, "shared_attn", dtype=dtype
+        )
+
+    if cfg.is_encoder_decoder:
+        enc_keys = jax.random.split(keys[6], cfg.n_encoder_layers)
+        p["encoder"] = {
+            "blocks": jax.vmap(
+                lambda k: transformer.block_init(k, cfg, "attn", dtype=dtype)
+            )(enc_keys),
+            "final_norm": layers.rmsnorm_init(cfg.d_model, dtype=dtype),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _encode(p, frames, cfg, parallel):
+    """Whisper encoder over stub frame embeddings [B, S_enc, d]."""
+    bsz, s, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (bsz, s))
+    x = frames + _sinusoidal(pos, cfg.d_model, frames.dtype)
+
+    def body(x, blk):
+        x = transformer.block_apply(
+            blk, x, cfg, "attn", positions=pos, parallel=parallel,
+            causal=False,
+        )
+        return x, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, p["encoder"]["blocks"])
+    else:
+        for u in range(cfg.n_encoder_layers):
+            blk = jax.tree_util.tree_map(
+                lambda t: t[u], p["encoder"]["blocks"]
+            )
+            x, _ = body(x, blk)
+    return layers.rmsnorm(x, p["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def forward(
+    p: Params, tokens: jax.Array, cfg, *,
+    parallel: ParallelContext = NO_PARALLEL,
+    mrope_positions=None, frames=None, remat: bool = False,
+) -> jax.Array:
+    """Logits over the full sequence.  tokens: [B, S] int32."""
+    head, pat, n_units, tail = _stack_layout(cfg)
+    bsz, s = tokens.shape
+    x = p["embed"][tokens].astype(_dtype_of(cfg))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (bsz, s))
+    memory = None
+    if cfg.is_encoder_decoder:
+        x = x + _sinusoidal(positions, cfg.d_model, x.dtype)
+        memory = _encode(p, frames, cfg, parallel)
+
+    def apply_block(blk, x, kind, is_head=False):
+        def run(blk_, x_):
+            out = transformer.block_apply(
+                blk_, x_, cfg, kind, positions=positions, parallel=parallel,
+                mrope_positions=mrope_positions, memory=memory,
+                is_head=is_head,
+            )
+            return _constrain_seq(out, parallel)
+        if remat:
+            run = jax.checkpoint(run)
+        return run(blk, x)
+
+    for i, kind in enumerate(head):
+        x = apply_block(p["head_blocks"][str(i)], x, kind, is_head=True)
+
+    if n_units > 0:
+        def unit_body(x, unit_p):
+            for i, kind in enumerate(pat):
+                blk = p["shared_attn"] if kind == "shared_attn" \
+                    else unit_p[f"b{i}"]
+                x = apply_block(blk, x, kind)
+            return x, None
+
+        x = _constrain_seq(x, parallel)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(unit_body, x, p["units"])
+        else:  # unrolled (calibration / exact cost analysis)
+            for u in range(n_units):
+                unit_p = jax.tree_util.tree_map(lambda t: t[u], p["units"])
+                x, _ = unit_body(x, unit_p)
+
+    for i, kind in enumerate(tail):
+        blk = p["shared_attn"] if kind == "shared_attn" \
+            else p["tail_blocks"][str(i)]
+        x = apply_block(blk, x, kind)
+
+    x = layers.rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ p["embed"].T
+    else:
+        logits = x @ p["lm_head"]
+    return _mask_pad_logits(logits, cfg)
+
+
+def _constrain_seq(x, parallel: ParallelContext):
+    """Megatron-SP-style constraint: between blocks, activations [B,S,d]
+    are sharded over the model axis along S, so remat-saved layer-boundary
+    tensors cost 1/tp of the replicated size.  GSPMD inserts the
+    all-gather/reduce-scatter pair around each block automatically."""
+    if not parallel.active or parallel.pure_dp:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tp = parallel.mesh.shape[parallel.model_axis]
+    if x.shape[1] % tp or x.shape[1] < tp:
+        return x
+    dax = parallel.data_axes
+    dspec = dax if len(dax) > 1 else dax[0]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(
+            parallel.mesh, P(dspec, parallel.model_axis, None)
+        )
+    )
+
+
+def _constrain_bsv(x, parallel: ParallelContext):
+    """Pin [B, S, V]-shaped activations to (data, None, model) sharding."""
+    if not parallel.active:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dax = parallel.data_axes
+    dspec = dax if len(dax) > 1 else dax[0]
+    v = x.shape[-1]
+    tp = parallel.mesh.shape[parallel.model_axis]
+    vspec = (
+        parallel.model_axis
+        if v % tp == 0 and not parallel.pure_dp else None
+    )
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(parallel.mesh, P(dspec, None, vspec))
+    )
+
+
+def loss_fn(
+    p: Params, batch: dict, cfg, *,
+    parallel: ParallelContext = NO_PARALLEL, remat: bool = True,
+) -> jax.Array:
+    """Next-token cross-entropy.  batch: tokens [B,S], labels [B,S] (+extras)."""
+    logits = forward(
+        p, batch["tokens"], cfg, parallel=parallel,
+        mrope_positions=batch.get("mrope_positions"),
+        frames=batch.get("frames"), remat=remat,
+    )
+    logits = _constrain_bsv(logits, parallel)
+    labels = batch["labels"]
+    # Vocab-sharded-friendly cross entropy:  -ll = lse(logits) - logits[y].
+    # The picked logit is a one-hot contraction (partitions over the vocab
+    # shard without gathering the full [B,S,V] log-prob tensor).
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)   # [B,S]
+    onehot = _constrain_bsv(
+        jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype),
+        parallel,
+    )
+    picked = jnp.einsum(
+        "bsv,bsv->bs", logits, onehot,
+        preferred_element_type=jnp.float32,
+    )
+    ll = picked - lse
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(ll)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def prefill(
+    p: Params, tokens: jax.Array, cfg, *,
+    parallel: ParallelContext = NO_PARALLEL, mrope_positions=None,
+    frames=None,
+) -> jax.Array:
+    """Inference prefill: forward pass returning last-position logits."""
+    logits = forward(
+        p, tokens, cfg, parallel=parallel, mrope_positions=mrope_positions,
+        frames=frames, remat=False,
+    )
+    return logits[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_caches(
+    key: jax.Array, cfg, *, batch: int, s_max: int,
+) -> dict:
+    """Decode-state pytree mirroring the stack layout."""
+    dtype = _dtype_of(cfg)
+    head, pat, n_units, tail = _stack_layout(cfg)
+    caches: dict = {
+        "head": {
+            str(i): transformer.init_block_cache(
+                jax.random.fold_in(key, 1000 + i), cfg, kind,
+                batch=batch, s_max=s_max, dtype=dtype,
+            )
+            for i, kind in enumerate(head)
+        },
+        "tail": {
+            str(i): transformer.init_block_cache(
+                jax.random.fold_in(key, 2000 + i), cfg, kind,
+                batch=batch, s_max=s_max, dtype=dtype,
+            )
+            for i, kind in enumerate(tail)
+        },
+    }
+
+    def unit_caches(k):
+        return {
+            f"b{i}": transformer.init_block_cache(
+                jax.random.fold_in(k, i), cfg, kind, batch=batch,
+                s_max=s_max, dtype=dtype,
+            )
+            for i, kind in enumerate(pat)
+        }
+
+    if n_units > 0:
+        caches["units"] = jax.vmap(unit_caches)(
+            jax.random.split(key, n_units)
+        )
+    else:
+        caches["units"] = {}
+
+    if cfg.is_encoder_decoder:
+        # cross-attention K/V per decoder block (head+scan+tail), built at
+        # prefill from the encoder memory; here zero-initialized.
+        hd = cfg.head_dim
+        def mem_kv(_):
+            return (
+                jnp.zeros((batch, s_max, cfg.n_heads, hd), dtype),
+                jnp.zeros((batch, s_max, cfg.n_heads, hd), dtype),
+            )
+        caches["cross"] = {
+            "head": {str(i): mem_kv(None) for i in range(len(head))},
+            "units": jax.vmap(
+                lambda k: {f"b{i}": mem_kv(None) for i in range(len(pat))}
+            )(jax.random.split(key, n_units)) if n_units else {},
+            "tail": {str(i): mem_kv(None) for i in range(len(tail))},
+        }
+    return caches
+
+
+def serve_step(
+    p: Params, caches: dict, tokens: jax.Array, pos: jax.Array, cfg, *,
+    parallel: ParallelContext = NO_PARALLEL, mrope_positions=None,
+) -> tuple[jax.Array, dict]:
+    """Decode one token.  tokens: [B,1] int32; pos: [B] int32.
+
+    Returns (logits [B, vocab], new caches).
+    """
+    head, pat, n_units, tail = _stack_layout(cfg)
+    x = p["embed"][tokens].astype(_dtype_of(cfg))
+    if cfg.is_encoder_decoder:
+        x = x + _sinusoidal(pos[:, None], cfg.d_model, x.dtype)
+
+    new_caches = {"head": {}, "tail": {}}
+    cross = caches.get("cross")
+
+    def dec_block(blk, x, kind, cache, mem_kv, is_head=False):
+        return transformer.block_decode(
+            blk, x, cfg, kind, cache, pos, parallel=parallel,
+            mrope_positions=mrope_positions, memory_kv=mem_kv,
+            is_head=is_head,
+        )
+
+    for i, kind in enumerate(head):
+        mem = cross["head"][str(i)] if cross else None
+        x, c = dec_block(
+            p["head_blocks"][str(i)], x, kind, caches["head"][str(i)], mem,
+            is_head=True,
+        )
+        new_caches["head"][str(i)] = c
+
+    if n_units > 0:
+        def unit_body(x, scanned):
+            unit_p, unit_c, unit_cross = scanned
+            new_c = {}
+            for i, kind in enumerate(pat):
+                blk = p["shared_attn"] if kind == "shared_attn" \
+                    else unit_p[f"b{i}"]
+                mem = unit_cross[f"b{i}"] if unit_cross is not None else None
+                x, c = dec_block(blk, x, kind, unit_c[f"b{i}"], mem)
+                new_c[f"b{i}"] = c
+            return x, new_c
+
+        unit_cross = cross["units"] if cross else None
+        if cfg.scan_layers:
+            if unit_cross is None:
+                x, new_units = jax.lax.scan(
+                    lambda xx, sc: unit_body(xx, (sc[0], sc[1], None)),
+                    x, (p["units"], caches["units"]),
+                )
+            else:
+                x, new_units = jax.lax.scan(
+                    unit_body, x, (p["units"], caches["units"], unit_cross)
+                )
+        else:  # unrolled (calibration / exact cost analysis)
+            slot = lambda tree, u: jax.tree_util.tree_map(
+                lambda t: t[u], tree
+            )
+            collected = []
+            for u in range(n_units):
+                x, c_u = unit_body(
+                    x,
+                    (
+                        slot(p["units"], u), slot(caches["units"], u),
+                        slot(unit_cross, u) if unit_cross is not None
+                        else None,
+                    ),
+                )
+                collected.append(c_u)
+            new_units = jax.tree_util.tree_map(
+                lambda *ts: jnp.stack(ts), *collected
+            )
+        new_caches["units"] = new_units
+    else:
+        new_caches["units"] = {}
+
+    for i, kind in enumerate(tail):
+        blk = p["shared_attn"] if kind == "shared_attn" \
+            else p["tail_blocks"][str(i)]
+        mem = cross["tail"][str(i)] if cross else None
+        x, c = dec_block(blk, x, kind, caches["tail"][str(i)], mem)
+        new_caches["tail"][str(i)] = c
+
+    if cross is not None:
+        new_caches["cross"] = cross
+
+    x = layers.rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x[:, 0] @ p["embed"].T
+    else:
+        logits = x[:, 0] @ p["lm_head"]
+    return _mask_pad_logits(logits, cfg), new_caches

@@ -1,0 +1,228 @@
+"""Mamba2 (state-space duality) blocks for the zamba2 hybrid architecture.
+
+Training/prefill uses the chunked SSD algorithm (quadratic intra-chunk +
+linear inter-chunk recurrence via lax.scan over chunks) — the TPU-friendly
+formulation: all heavy math is batched matmuls.  Decode is the O(1)/token
+state recurrence, which is what makes ``long_500k`` native for SSM/hybrid
+archs (DESIGN.md §5).
+
+Projections for the (z, x, B, C, dt) streams are separate parameters (not
+one fused in_proj): the fused layout's split boundaries do not align with
+TP shard boundaries on the model axis, which would force XLA to reshard;
+separate projections shard cleanly (x/z/dt over heads, B/C replicated —
+they are G*N = 128-dim, tiny).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Params = dict[str, Any]
+
+
+def mamba_init(key, cfg, *, dtype) -> Params:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h = d_in // cfg.ssm_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "in_z": layers.dense_init(ks[0], d, d_in, dtype=dtype),
+        "in_x": layers.dense_init(ks[1], d, d_in, dtype=dtype),
+        "in_b": layers.dense_init(ks[2], d, g * n, dtype=dtype),
+        "in_c": layers.dense_init(ks[3], d, g * n, dtype=dtype),
+        "in_dt": layers.dense_init(ks[4], d, h, dtype=dtype),
+        "conv_x": (
+            jax.random.normal(ks[5], (cfg.ssm_conv, d_in)) * 0.1
+        ).astype(dtype),
+        "conv_bc": (
+            jax.random.normal(ks[6], (cfg.ssm_conv, 2 * g * n)) * 0.1
+        ).astype(dtype),
+        "conv_bias_x": jnp.zeros((d_in,), dtype),
+        "conv_bias_bc": jnp.zeros((2 * g * n,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gate_norm": layers.rmsnorm_init(d_in, dtype=dtype),
+        "out_proj": layers.dense_init(ks[7], d_in, d, dtype=dtype),
+    }
+
+
+def _project(p, x, cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h = d_in // cfg.ssm_head_dim
+    z = x @ p["in_z"]
+    xc = x @ p["in_x"]
+    bc = jnp.concatenate([x @ p["in_b"], x @ p["in_c"]], axis=-1)
+    dt = x @ p["in_dt"]
+    return z, xc, bc, dt, (d_in, g, n, h)
+
+
+def _causal_conv(seq, w, b):
+    """Depthwise causal conv.  seq: [B,S,C]; w: [K,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + seq.shape[1], :] * w[i][None, None, :]
+        for i in range(k)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j < l <= i} x[..., l]."""
+    s = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((s, s), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, a, b_, c_, *, chunk: int):
+    """Chunked state-space-duality scan.
+
+    xh: [B,S,H,P] head inputs; dt: [B,S,H] (post-softplus); a: [H] (<0);
+    b_, c_: [B,S,G,N] (G broadcast over H).  Returns y [B,S,H,P] (float32).
+    """
+    bsz, s, h, p = xh.shape
+    g, n = b_.shape[2], b_.shape[3]
+    nc = s // chunk
+
+    def rs(t):  # [B,S,...] -> [B,nc,chunk,...]
+        return t.reshape((bsz, nc, chunk) + t.shape[2:])
+
+    xh_c, dt_c = rs(xh.astype(jnp.float32)), rs(dt)
+    # keep B/C at group granularity ([B,nc,L,G,N]) — repeating them to H
+    # heads would materialize a [B,nc,L,H,N] tensor (tens of GB at pod
+    # batch sizes); the einsums below broadcast the group dim instead.
+    b_c = rs(b_.astype(jnp.float32))                    # [B,nc,L,G,N]
+    c_c = rs(c_.astype(jnp.float32))
+
+    da = dt_c * a[None, None, None, :]                  # [B,nc,L,H]
+    da_cs = jnp.cumsum(da, axis=2)                      # within-chunk cumsum
+    xdt = xh_c * dt_c[..., None]                        # [B,nc,L,H,P]
+
+    # heads per group: head h belongs to group h // (H // G)
+    hg = h // g
+
+    def grp(t_h):  # [.., H, ..] view grouped as [.., G, hg, ..] on axis 3
+        return t_h.reshape(t_h.shape[:3] + (g, hg) + t_h.shape[4:])
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    l_mat = jnp.exp(_segsum(jnp.moveaxis(da, 2, -1)))   # [B,nc,H,L,L]
+    scores = jnp.einsum("bclgn,bcmgn->bcglm", c_c, b_c)  # [B,nc,G,L,L]
+    l_grp = l_mat.reshape(bsz, nc, g, hg, chunk, chunk)
+    sc_l = scores[:, :, :, None, :, :] * l_grp           # [B,nc,G,hg,L,L]
+    xdt_g = grp(xdt)                                     # [B,nc,L,G,hg,P]
+    y_diag = jnp.einsum(
+        "bcgelm,bcmgep->bclgep", sc_l, xdt_g
+    ).reshape(bsz, nc, chunk, h, p)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)  # [B,nc,L,H]
+    xdt_decay = xdt * decay_to_end[..., None]            # [B,nc,L,H,P]
+    states = jnp.einsum(
+        "bclgn,bclgep->bcgenp", b_c, grp(xdt_decay)
+    ).reshape(bsz, nc, h, n, p)                          # [B,nc,H,N,P]
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])            # [B,nc,H]
+
+    # ---- inter-chunk recurrence ----
+    def step(carry, inp):
+        st, dec = inp                                    # [B,H,N,P], [B,H]
+        new = carry * dec[..., None, None] + st
+        return new, carry                                # emit previous state
+
+    init = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # [B,nc,H,N,P]
+
+    # ---- inter-chunk contribution ----
+    state_decay = jnp.exp(da_cs)                         # [B,nc,L,H]
+    prev_g = prev_states.reshape(bsz, nc, g, hg, n, p)
+    y_off = jnp.einsum(
+        "bclgn,bcgenp->bclgep", c_c, prev_g
+    ).reshape(bsz, nc, chunk, h, p) * state_decay.reshape(
+        bsz, nc, chunk, h
+    )[..., None]
+    return (y_diag + y_off).reshape(bsz, s, h, p)
+
+
+def mamba_block(p: Params, x: jax.Array, cfg, *, chunk: int = 128):
+    """Full-sequence Mamba2 block.  x: [B,S,d] -> [B,S,d]."""
+    bsz, s, d = x.shape
+    z, xc, bc, dt, (d_in, g, n, h) = _project(p, x, cfg)
+    xc = _causal_conv(xc, p["conv_x"], p["conv_bias_x"])
+    bc = _causal_conv(bc, p["conv_bc"], p["conv_bias_bc"])
+    b_, c_ = jnp.split(bc, 2, axis=-1)
+
+    ph = cfg.ssm_head_dim
+    xh = xc.reshape(bsz, s, h, ph)
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + p["dt_bias"][None, None, :]
+    )
+    a = -jnp.exp(p["a_log"])
+    b_ = b_.reshape(bsz, s, g, n)
+    c_ = c_.reshape(bsz, s, g, n)
+
+    ch = min(chunk, s)
+    while s % ch:
+        ch //= 2
+    y = ssd_chunked(xh, dt, a, b_, c_, chunk=max(ch, 1))
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, d_in).astype(x.dtype)
+
+    y = layers.rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def mamba_decode(
+    p: Params, x: jax.Array, cfg, *, conv_cache, ssm_state,
+):
+    """One decode step.
+
+    x: [B,1,d]; conv_cache: (x_win [B,K-1,d_in], bc_win [B,K-1,2GN]);
+    ssm_state: [B,H,N,P].  Returns (out, new_conv_cache, new_ssm_state).
+    """
+    bsz = x.shape[0]
+    z, xc, bc, dt, (d_in, g, n, h) = _project(p, x, cfg)
+
+    def conv_step(win, new, w, bias):
+        full = jnp.concatenate([win, new], axis=1)       # [B,K,C]
+        out = jnp.sum(full * w[None, :, :], axis=1, keepdims=True)
+        return jax.nn.silu(out + bias[None, None, :]), full[:, 1:, :]
+
+    x_win, bc_win = conv_cache
+    xc, x_win = conv_step(x_win, xc, p["conv_x"], p["conv_bias_x"])
+    bc, bc_win = conv_step(bc_win, bc, p["conv_bc"], p["conv_bias_bc"])
+    b_, c_ = jnp.split(bc, 2, axis=-1)
+
+    ph = cfg.ssm_head_dim
+    xh = xc.reshape(bsz, h, ph).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt.reshape(bsz, h).astype(jnp.float32) + p["dt_bias"][None, :]
+    )
+    a = -jnp.exp(p["a_log"])
+    rep = h // g
+    b1 = jnp.repeat(b_.reshape(bsz, g, n), rep, axis=1)  # [B,H,N]
+    c1 = jnp.repeat(c_.reshape(bsz, g, n), rep, axis=1)
+
+    decay = jnp.exp(dt * a[None, :])                     # [B,H]
+    ssm_state = (
+        ssm_state * decay[..., None, None]
+        + jnp.einsum("bhn,bhp->bhnp", b1, xh * dt[..., None])
+    )
+    y = jnp.einsum("bhnp,bhn->bhp", ssm_state, c1)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = layers.rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], (x_win, bc_win), ssm_state

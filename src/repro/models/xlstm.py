@@ -1,0 +1,187 @@
+"""xLSTM blocks: mLSTM (matrix memory, exp gating) and sLSTM (scalar memory
+with recurrent feedback).  Both are O(1)-state recurrences, so decode at
+arbitrary context length is native (no KV cache, no attention — the paper's
+aggregated-KV technique is inapplicable here; see DESIGN.md §5).
+
+Training uses lax.scan over time.  States:
+  mLSTM: (C [B,H,dk,dv], n [B,H,dk], m [B,H])
+  sLSTM: (c [B,H,dh], n [B,H,dh], h [B,H,dh], m [B,H,dh])
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------- mLSTM ----
+
+def mlstm_init(key, cfg, *, dtype) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    dk = d // h
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": layers.dense_init(ks[0], d, d, dtype=dtype),
+        "wk": layers.dense_init(ks[1], d, d, dtype=dtype),
+        "wv": layers.dense_init(ks[2], d, d, dtype=dtype),
+        "w_if": layers.dense_init(ks[3], d, 2 * h, dtype=dtype),
+        "w_o": layers.dense_init(ks[4], d, d, dtype=dtype),
+        "out_proj": layers.dense_init(ks[5], d, d, dtype=dtype),
+        "ln": layers.rmsnorm_init(d, dtype=dtype),
+        "b_if": jnp.zeros((2 * h,), jnp.float32),
+    }
+
+
+def _mlstm_gates(p, x, cfg):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dk = d // h
+    q = (x @ p["wq"]).reshape(b, s, h, dk) / math.sqrt(dk)
+    k = (x @ p["wk"]).reshape(b, s, h, dk) / math.sqrt(dk)
+    v = (x @ p["wv"]).reshape(b, s, h, dk)
+    if_ = (x @ p["w_if"]).astype(jnp.float32) + p["b_if"][None, None, :]
+    i_pre, f_pre = jnp.split(if_, 2, axis=-1)           # [B,S,H]
+    o = jax.nn.sigmoid(x @ p["w_o"])                    # [B,S,d]
+    return q, k, v, i_pre, f_pre, o
+
+
+def mlstm_step(state, inputs):
+    """One stabilized mLSTM time step (scanned over S)."""
+    c, n, m = state                                      # [B,H,dk,dv],[B,H,dk],[B,H]
+    q, k, v, i_pre, f_pre, = inputs
+    logf = jax.nn.log_sigmoid(f_pre)                     # [B,H]
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c = f_g[..., None, None] * c + i_g[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :]
+    )
+    n = f_g[..., None] * n + i_g[..., None] * kf
+    qf = q.astype(jnp.float32)
+    denom = jnp.maximum(
+        jnp.abs(jnp.sum(n * qf, axis=-1)), jnp.exp(-m_new)
+    )                                                    # [B,H]
+    h_t = jnp.einsum("bhk,bhkv->bhv", qf, c) / denom[..., None]
+    return (c, n, m_new), h_t
+
+
+def mlstm_block(p: Params, x: jax.Array, cfg) -> jax.Array:
+    """Full-sequence mLSTM block.  x: [B,S,d]."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dk = d // h
+    q, k, v, i_pre, f_pre, o = _mlstm_gates(p, x, cfg)
+    init = (
+        jnp.zeros((b, h, dk, dk), jnp.float32),
+        jnp.zeros((b, h, dk), jnp.float32),
+        jnp.full((b, h), -1e30, jnp.float32),
+    )
+    xs = (
+        jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+        jnp.moveaxis(i_pre, 1, 0).reshape(s, b, h),
+        jnp.moveaxis(f_pre, 1, 0).reshape(s, b, h),
+    )
+    _, hs = layers.checkpointed_scan(mlstm_step, init, xs)  # [S,B,H,dv]
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    hs = layers.rmsnorm(hs, p["ln"], cfg.norm_eps) * o
+    return hs @ p["out_proj"]
+
+
+def mlstm_decode(p: Params, x: jax.Array, cfg, *, state):
+    """One decode step.  x: [B,1,d]."""
+    b, _, d = x.shape
+    h = cfg.n_heads
+    q, k, v, i_pre, f_pre, o = _mlstm_gates(p, x, cfg)
+    sq = lambda t: t[:, 0]
+    new_state, h_t = mlstm_step(
+        state, (sq(q), sq(k), sq(v), sq(i_pre), sq(f_pre))
+    )
+    hs = h_t.reshape(b, 1, d).astype(x.dtype)
+    hs = layers.rmsnorm(hs, p["ln"], cfg.norm_eps) * o
+    return hs @ p["out_proj"], new_state
+
+
+def mlstm_empty_state(b, cfg):
+    h = cfg.n_heads
+    dk = cfg.d_model // h
+    return (
+        jnp.zeros((b, h, dk, dk), jnp.float32),
+        jnp.zeros((b, h, dk), jnp.float32),
+        jnp.full((b, h), -1e30, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------- sLSTM ----
+
+def slstm_init(key, cfg, *, dtype) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        # input projections for i/f/z/o gates
+        "w_x": layers.dense_init(ks[0], d, 4 * d, dtype=dtype),
+        # block-diagonal recurrent feedback per head: [H, dh, 4*dh]
+        "r_h": (
+            jax.random.normal(ks[1], (h, dh, 4 * dh)) / math.sqrt(dh)
+        ).astype(dtype),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "gn": layers.rmsnorm_init(d, dtype=dtype),
+        "out_proj": layers.dense_init(ks[2], d, d, dtype=dtype),
+    }
+
+
+def slstm_step(p, cfg, state, x_t):
+    """x_t: [B,d].  State: (c, n, h, m) each [B,H,dh]."""
+    b, d = x_t.shape
+    hh = cfg.n_heads
+    dh = d // hh
+    c, n, h_prev, m = state
+    pre = (x_t @ p["w_x"]).astype(jnp.float32)
+    rec = jnp.einsum(
+        "bhd,hdf->bhf", h_prev.astype(p["r_h"].dtype), p["r_h"]
+    ).astype(jnp.float32)                                # [B,H,4*dh]
+    pre = pre.reshape(b, hh, 4 * dh) + rec + p["bias"].reshape(hh, 4 * dh)
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c = f_g * c + i_g * z
+    n = f_g * n + i_g
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h_new, m_new), h_new
+
+
+def slstm_block(p: Params, x: jax.Array, cfg) -> jax.Array:
+    b, s, d = x.shape
+    state = slstm_empty_state(b, cfg)
+    step = lambda st, xt: slstm_step(p, cfg, st, xt)
+    _, hs = layers.checkpointed_scan(step, state, jnp.moveaxis(x, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    hs = layers.rmsnorm(hs, p["gn"], cfg.norm_eps)
+    return hs @ p["out_proj"]
+
+
+def slstm_decode(p: Params, x: jax.Array, cfg, *, state):
+    new_state, h_t = slstm_step(p, cfg, state, x[:, 0])
+    b, _, d = x.shape
+    hs = h_t.reshape(b, 1, d).astype(x.dtype)
+    hs = layers.rmsnorm(hs, p["gn"], cfg.norm_eps)
+    return hs @ p["out_proj"], new_state
+
+
+def slstm_empty_state(b, cfg):
+    hh = cfg.n_heads
+    dh = cfg.d_model // hh
+    z = jnp.zeros((b, hh, dh), jnp.float32)
+    return (z, z, z, jnp.full((b, hh, dh), -1e30, jnp.float32))

@@ -1,0 +1,259 @@
+"""Parameter/activation PartitionSpec rules for the production meshes.
+
+Sharding policy (DESIGN.md §4):
+  * TP over ``model``: attention heads, MLP hidden, MoE experts (EP), vocab.
+  * FSDP over the data axes (``data``; ``pod`` composes in multi-pod): the
+    remaining large dim of each 2D+ parameter, when divisible.
+  * Small/odd tensors (norms, biases, low-head-count attention such as
+    whisper-tiny's 6 heads or gemma3's 4) stay replicated — slicing a
+    6-head projection 16 ways just buys resharding collectives.
+
+Rules are *config-aware* (they check divisibility against the actual mesh
+axis sizes) and path-based: the flattened parameter path decides the role
+of each tensor.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# parameter-name suffixes by role ------------------------------------------
+_HEADS_OUT = ("wq", "wk", "wv", "w_uq", "bq", "bk", "bv")   # [.., H*hd]
+_HEADS_IN = ("wo",)                                          # [H*hd, ..]
+_FF_OUT = ("w_gate", "w_up", "in_z", "in_x", "in_dt")        # [d, ff]
+_FF_IN = ("w_down", "out_proj")                              # [ff, d]
+_VOCAB = ("embed",)
+_LM_HEAD = ("lm_head",)
+_EXPERT = ("moe/w_gate", "moe/w_up", "moe/w_down")           # [E, ..]
+_REPLICATE_HINTS = (
+    "norm", "bias", "a_log", "d_skip", "dt_bias", "router", "b_if",
+    "in_b", "in_c", "conv", "r_h", "w_if", "shared",
+)
+
+
+def _divisible(n: int, by: int) -> bool:
+    """Shardable: axis size >1 (no-op axes never claim a dim) and divides."""
+    return by > 1 and n % by == 0
+
+
+def infer_param_spec(
+    path_s: str, shape: tuple, cfg, *, tp: int, fsdp: int,
+    data_axes: tuple, model_axis: str = "model",
+) -> P:
+    """PartitionSpec for one parameter."""
+    name = path_s.split("/")[-1]
+    ndim = len(shape)
+    spec: list = [None] * ndim
+
+    def fsdp_remaining():
+        """FSDP-shard the largest still-unsharded dim if divisible."""
+        if fsdp <= 1:
+            return
+        order = sorted(
+            range(ndim), key=lambda i: -(shape[i] if spec[i] is None else -1)
+        )
+        for i in order:
+            if spec[i] is None and _divisible(shape[i], fsdp) \
+                    and shape[i] >= 4 * fsdp:
+                spec[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+                return
+
+    heads_shardable = (
+        _divisible(cfg.n_heads, tp) and _divisible(cfg.n_kv_heads, tp)
+    )
+    is_expert = any(path_s.endswith(e) for e in _EXPERT) or (
+        "moe/" in path_s and name in ("w_gate", "w_up", "w_down")
+        and "shared" not in path_s
+    )
+
+    if is_expert and ndim == 3:
+        if _divisible(shape[0], tp):
+            spec[0] = model_axis
+        fsdp_remaining()
+        return P(*spec)
+
+    if any(h in path_s for h in _REPLICATE_HINTS) and not is_expert:
+        # norms/biases/routers/small projections: replicated (or FSDP for 2D)
+        if ndim >= 2:
+            fsdp_remaining()
+        return P(*spec)
+
+    if name in _VOCAB and ndim == 2:
+        # tied embeddings double as the lm_head: shard the vocab dim so the
+        # logits matmul partitions; untied embeddings shard d_model instead
+        # (the token gather then only moves [B,S,d/tp] shards, and the
+        # all-gather of d is cheap).
+        if cfg.tie_embeddings:
+            if _divisible(shape[0], tp):
+                spec[0] = model_axis
+        else:
+            if _divisible(shape[1], tp):
+                spec[1] = model_axis
+        fsdp_remaining()
+        return P(*spec)
+    if name in _LM_HEAD and ndim == 2:
+        if _divisible(shape[1], tp):
+            spec[1] = model_axis
+        fsdp_remaining()
+        return P(*spec)
+
+    if name in _HEADS_OUT:
+        if heads_shardable and _divisible(shape[-1], tp):
+            spec[-1] = model_axis
+        if ndim >= 2:
+            fsdp_remaining()
+        return P(*spec)
+    if name in _HEADS_IN and ndim == 2:
+        if heads_shardable and _divisible(shape[0], tp):
+            spec[0] = model_axis
+        fsdp_remaining()
+        return P(*spec)
+
+    if name in _FF_OUT and ndim == 2:
+        if _divisible(shape[1], tp):
+            spec[1] = model_axis
+        fsdp_remaining()
+        return P(*spec)
+    if name in _FF_IN and ndim == 2:
+        if _divisible(shape[0], tp):
+            spec[0] = model_axis
+        fsdp_remaining()
+        return P(*spec)
+
+    # MLA latents: shard the head-structured output dims
+    if name in ("w_uk", "w_uv") and ndim == 2:
+        if _divisible(cfg.n_heads, tp) and _divisible(shape[1], tp):
+            spec[1] = model_axis
+        fsdp_remaining()
+        return P(*spec)
+    if name in ("w_dq", "w_dkv", "w_kr") and ndim == 2:
+        fsdp_remaining()
+        return P(*spec)
+
+    if ndim >= 2:
+        fsdp_remaining()
+    return P(*spec)
+
+
+def param_specs(params: Any, cfg, mesh: Mesh, *, model_axis="model"):
+    """Pytree of PartitionSpecs mirroring ``params``."""
+    if getattr(cfg, "prefer_pure_dp", False):
+        # model axis folded into data: no TP; FSDP over the whole mesh
+        tp = 1
+        data_axes = tuple(mesh.axis_names)
+    else:
+        tp = mesh.shape[model_axis]
+        data_axes = tuple(a for a in mesh.axis_names if a != model_axis)
+    fsdp = 1
+    for a in data_axes:
+        fsdp *= mesh.shape[a]
+
+    def leaf_spec(path, leaf):
+        path_s = _path_str(path)
+        shape = leaf.shape
+        # scanned stacks carry a leading [n_units]/[n_enc_layers] axis that
+        # must stay unsharded; apply the rules to the per-layer shape
+        stacked = path_s.startswith("units/") or "/blocks/" in path_s \
+            or path_s.startswith("encoder/blocks")
+        if stacked and len(shape) >= 2:
+            inner = infer_param_spec(
+                path_s, shape[1:], cfg, tp=tp, fsdp=fsdp,
+                data_axes=data_axes, model_axis=model_axis,
+            )
+            return P(None, *inner)
+        return infer_param_spec(
+            path_s, shape, cfg, tp=tp, fsdp=fsdp,
+            data_axes=data_axes, model_axis=model_axis,
+        )
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def param_shardings(params: Any, cfg, mesh: Mesh, **kw):
+    specs = param_specs(params, cfg, mesh, **kw)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# -- batch / cache specs ----------------------------------------------------
+
+def batch_specs(cfg, mesh: Mesh, *, kind: str, model_axis="model"):
+    """PartitionSpecs for step inputs (tokens/labels/frames/cache...)."""
+    if getattr(cfg, "prefer_pure_dp", False):
+        data_axes = tuple(mesh.axis_names)
+    else:
+        data_axes = tuple(a for a in mesh.axis_names if a != model_axis)
+    dspec = data_axes if len(data_axes) > 1 else data_axes[0]
+    b = P(dspec)          # [B, ...] batch-sharded
+    bs = P(dspec, None)
+    specs = {"tokens": bs, "labels": bs, "loss_mask": bs}
+    if cfg.is_encoder_decoder:
+        specs["frames"] = P(dspec, None, None)
+    if cfg.mrope:
+        specs["mrope_positions"] = P(None, dspec, None)
+    if kind == "decode":
+        specs["pos"] = b
+    return specs
+
+
+def cache_specs(caches: Any, cfg, mesh: Mesh, *, model_axis="model"):
+    """Shard decode caches: batch over data axes when divisible, else the
+    longest sequence-like dim over data axes (long_500k batch=1), kv-heads
+    over model when divisible."""
+    if getattr(cfg, "prefer_pure_dp", False):
+        data_axes = tuple(mesh.axis_names)
+    else:
+        data_axes = tuple(a for a in mesh.axis_names if a != model_axis)
+    dsz = 1
+    for a in data_axes:
+        dsz *= mesh.shape[a]
+    dspec = data_axes if len(data_axes) > 1 else data_axes[0]
+    tp = 1 if getattr(cfg, "prefer_pure_dp", False) \
+        else mesh.shape[model_axis]
+
+    def leaf_spec(path, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        # stacked-unit leading axis (n_units) is never sharded; detect via
+        # path containing 'units'
+        offset = 1 if "units" in _path_str(path) else 0
+        bdim = offset
+        if len(shape) > bdim and _divisible(shape[bdim], dsz):
+            spec[bdim] = dspec
+            # kv-head dim over model if present and divisible
+            if tp > 1:
+                for i in range(bdim + 1, len(shape)):
+                    if _divisible(shape[i], tp) and shape[i] >= tp \
+                            and i >= bdim + 2:
+                        spec[i] = model_axis
+                        break
+        else:
+            # batch not shardable (e.g. batch=1 long-context): shard the
+            # largest dim (sequence) over the data axes instead
+            order = sorted(
+                range(bdim, len(shape)), key=lambda i: -shape[i]
+            )
+            for i in order:
+                if _divisible(shape[i], dsz) and shape[i] >= dsz:
+                    spec[i] = dspec
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, caches)

@@ -1,0 +1,4 @@
+"""Fault-tolerance / elasticity runtime."""
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    FailureInjector, Heartbeat, Supervisor,
+)

@@ -1,0 +1,140 @@
+"""Integration tests: the paper's two applications + Algorithm 1 invariants."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.apps import cf, knn
+from repro.data.synthetic import (
+    holdout_split, make_mfeat_like, make_netflix_like,
+)
+
+
+@pytest.fixture(scope="module")
+def knn_data():
+    x, y = make_mfeat_like(
+        jax.random.PRNGKey(0), n_points=3000, n_features=24, n_classes=8
+    )
+    return x[200:], y[200:], x[:200], y[:200]
+
+
+@pytest.fixture(scope="module")
+def cf_data():
+    ratings, mask = make_netflix_like(
+        jax.random.PRNGKey(1), n_users=1200, n_items=300, density=0.12
+    )
+    train_mask, test_mask = holdout_split(jax.random.PRNGKey(2), mask, 0.2)
+    train_r = ratings * train_mask
+    return (
+        train_r[50:], train_mask[50:],              # neighbourhood shard
+        train_r[:50], train_mask[:50],              # active users
+        ratings[:50], test_mask[:50],               # ground truth
+    )
+
+
+# ---------------------------------------------------------------- kNN ----
+
+def test_knn_full_refinement_equals_exact(knn_data):
+    tx, ty, qx, qy = knn_data
+    exact = knn.run_exact(tx, ty, qx, k=5, n_classes=8, n_shards=2)
+    full = knn.run_accurateml(
+        tx, ty, qx, k=5, n_classes=8, compression_ratio=16.0, eps_max=1.0,
+        lsh_key=jax.random.PRNGKey(7), n_shards=2,
+    )
+    assert knn.accuracy(full, exact) == 1.0
+
+
+def test_knn_accuracy_improves_with_refinement(knn_data):
+    tx, ty, qx, qy = knn_data
+    exact = knn.run_exact(tx, ty, qx, k=5, n_classes=8, n_shards=2)
+    acc_exact = knn.accuracy(exact, qy)
+    losses = []
+    for eps in (0.0, 0.05, 0.3):
+        pred = knn.run_accurateml(
+            tx, ty, qx, k=5, n_classes=8, compression_ratio=16.0,
+            eps_max=eps, lsh_key=jax.random.PRNGKey(7), n_shards=2,
+        )
+        losses.append(knn.accuracy_loss(acc_exact, knn.accuracy(pred, qy)))
+    assert losses[0] >= losses[1] >= losses[2] - 1e-9
+    assert losses[2] <= 0.05
+
+
+def test_knn_beats_sampling_at_equal_work(knn_data):
+    """Paper §IV-C: equal processed-point budget, AccurateML loses less."""
+    tx, ty, qx, qy = knn_data
+    exact = knn.run_exact(tx, ty, qx, k=5, n_classes=8, n_shards=2)
+    acc_exact = knn.accuracy(exact, qy)
+    r, eps = 20.0, 0.02
+    equal_frac = 1.0 / r + eps  # stage1 + stage2 points == sampled points
+    pred_a = knn.run_accurateml(
+        tx, ty, qx, k=5, n_classes=8, compression_ratio=r, eps_max=eps,
+        lsh_key=jax.random.PRNGKey(7), n_shards=2,
+    )
+    pred_s = knn.run_sampled(
+        tx, ty, qx, k=5, n_classes=8, sample_frac=equal_frac,
+        sample_key=jax.random.PRNGKey(3), n_shards=2,
+    )
+    loss_a = knn.accuracy_loss(acc_exact, knn.accuracy(pred_a, qy))
+    loss_s = knn.accuracy_loss(acc_exact, knn.accuracy(pred_s, qy))
+    assert loss_a <= loss_s + 1e-9, (loss_a, loss_s)
+
+
+def test_knn_shard_invariance(knn_data):
+    """Sharding the data (MapReduce) must not change exact results."""
+    tx, ty, qx, qy = knn_data
+    p1 = knn.run_exact(tx, ty, qx, k=5, n_classes=8, n_shards=1)
+    p4 = knn.run_exact(tx, ty, qx, k=5, n_classes=8, n_shards=4)
+    assert knn.accuracy(p1, p4) == 1.0
+
+
+# ----------------------------------------------------------------- CF ----
+
+def test_cf_full_refinement_equals_exact(cf_data):
+    nr, nm, a, am, truth, tmask = cf_data
+    exact = cf.run_exact(nr, nm, a, am, n_shards=2)
+    full = cf.run_accurateml(
+        nr, nm, a, am, compression_ratio=16.0, eps_max=1.0,
+        lsh_key=jax.random.PRNGKey(9), n_shards=2,
+    )
+    assert abs(cf.rmse(exact, truth, tmask) - cf.rmse(full, truth, tmask)) < 1e-3
+    assert float(jnp.max(jnp.abs(exact - full))) < 0.05
+
+
+def test_cf_stage1_loss_small(cf_data):
+    """Paper: CF accuracy losses < 4 % even at high compression."""
+    nr, nm, a, am, truth, tmask = cf_data
+    exact = cf.run_exact(nr, nm, a, am, n_shards=2)
+    rmse_e = cf.rmse(exact, truth, tmask)
+    approx = cf.run_accurateml(
+        nr, nm, a, am, compression_ratio=20.0, eps_max=0.05,
+        lsh_key=jax.random.PRNGKey(9), n_shards=2,
+    )
+    loss = cf.rmse_loss(rmse_e, cf.rmse(approx, truth, tmask))
+    assert loss < 0.06, loss
+
+
+def test_cf_beats_sampling_at_equal_work(cf_data):
+    nr, nm, a, am, truth, tmask = cf_data
+    exact = cf.run_exact(nr, nm, a, am, n_shards=2)
+    rmse_e = cf.rmse(exact, truth, tmask)
+    r, eps = 20.0, 0.02
+    pred_a = cf.run_accurateml(
+        nr, nm, a, am, compression_ratio=r, eps_max=eps,
+        lsh_key=jax.random.PRNGKey(9), n_shards=2,
+    )
+    pred_s = cf.run_sampled(
+        nr, nm, a, am, sample_frac=1.0 / r + eps,
+        sample_key=jax.random.PRNGKey(4), n_shards=2,
+    )
+    loss_a = cf.rmse_loss(rmse_e, cf.rmse(pred_a, truth, tmask))
+    loss_s = cf.rmse_loss(rmse_e, cf.rmse(pred_s, truth, tmask))
+    assert loss_a <= loss_s + 1e-9, (loss_a, loss_s)
+
+
+def test_cf_shuffle_cost_model():
+    """Fig. 5 semantics: shuffle bytes scale ~1/r."""
+    full = cf.shuffle_bytes_exact(10_000, 500, 100)
+    b10 = cf.shuffle_bytes_accurateml(10_000, 500, 100, 10.0, 0.0)
+    b100 = cf.shuffle_bytes_accurateml(10_000, 500, 100, 100.0, 0.0)
+    assert b10 < full and b100 < b10
+    assert abs(b10 / full - 0.1) < 0.02
+    assert abs(b100 / full - 0.01) < 0.005

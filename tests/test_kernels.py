@@ -1,0 +1,171 @@
+"""Per-kernel validation: Pallas bodies (interpret mode) vs pure-jnp oracles,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.aggregated_attention import aggregated_attention_pallas
+from repro.kernels.cf_weights import cf_weights_pallas
+from repro.kernels.knn_distance import knn_distance_pallas
+from repro.kernels.lsh_hash import lsh_hash_pallas
+
+
+@pytest.mark.parametrize("q,n,d", [
+    (8, 16, 7), (100, 130, 32), (128, 128, 217), (65, 257, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_knn_distance_kernel(q, n, d, dtype):
+    key = jax.random.PRNGKey(q * 1000 + n)
+    qs = jax.random.normal(key, (q, d), dtype)
+    ps = jax.random.normal(jax.random.fold_in(key, 1), (n, d), dtype)
+    got = knn_distance_pallas(qs, ps, tq=64, tn=64, interpret=True)
+    want = ref.knn_distance(qs, ps)
+    tol = 1e-5 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,d,h", [(64, 16, 4), (200, 217, 6), (33, 8, 1)])
+def test_lsh_hash_kernel(n, d, h):
+    key = jax.random.PRNGKey(n)
+    x = jax.random.normal(key, (n, d))
+    a = jax.random.normal(jax.random.fold_in(key, 1), (d, h))
+    b = jax.random.uniform(jax.random.fold_in(key, 2), (h,), maxval=4.0)
+    got = lsh_hash_pallas(x, a, b, 4.0, tn=64, interpret=True)
+    want = ref.lsh_hash(x, a, b, 4.0)
+    # floor() at float boundaries: allow off-by-one on <0.1% of entries
+    diff = np.abs(np.asarray(got) - np.asarray(want))
+    assert (diff > 0).mean() < 1e-3
+    assert diff.max() <= 1
+
+
+@pytest.mark.parametrize("qn,un,i", [(16, 32, 20), (64, 130, 64), (5, 7, 300)])
+def test_cf_weights_kernel(qn, un, i):
+    key = jax.random.PRNGKey(qn)
+    r = jax.random.randint(key, (qn + un, i), 0, 6).astype(jnp.float32)
+    m = (jax.random.uniform(jax.random.fold_in(key, 1), (qn + un, i)) < 0.3
+         ).astype(jnp.float32)
+    a, am = (r * m)[:qn], m[:qn]
+    u, um = (r * m)[qn:], m[qn:]
+    got = cf_weights_pallas(a, am, u, um, tq=64, tu=64, interpret=True)
+    want = ref.cf_weights(a, am, u, um)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def _agg_case(key, s, kb, hq, hkv, dk, dv, refine_frac=0.4, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    q = jax.random.normal(ks[0], (hq, dk), dtype)
+    k_cache = jax.random.normal(ks[1], (s, hkv, dk), dtype)
+    v_cache = jax.random.normal(ks[2], (s, hkv, dv), dtype)
+    bucket_of = jax.random.randint(ks[3], (s,), 0, kb)
+    counts = jax.ops.segment_sum(
+        jnp.ones((s,), jnp.int32), bucket_of, num_segments=kb
+    )
+    # centroids = true bucket means (as the cache builder produces)
+    mean_k = jax.vmap(
+        lambda h: jax.ops.segment_sum(
+            k_cache[:, h, :].astype(jnp.float32), bucket_of,
+            num_segments=kb,
+        ), in_axes=0, out_axes=1,
+    )(jnp.arange(hkv)) / jnp.maximum(counts[:, None, None], 1)
+    mean_v = jax.vmap(
+        lambda h: jax.ops.segment_sum(
+            v_cache[:, h, :].astype(jnp.float32), bucket_of,
+            num_segments=kb,
+        ), in_axes=0, out_axes=1,
+    )(jnp.arange(hkv)) / jnp.maximum(counts[:, None, None], 1)
+    n_ref = max(1, int(refine_frac * kb))
+    refined = jnp.zeros((kb,), bool).at[:n_ref].set(True) & (counts > 0)
+    return q, k_cache, v_cache, bucket_of, mean_k, mean_v, counts, refined
+
+
+@pytest.mark.parametrize("s,kb,hq,hkv,dk,dv", [
+    (64, 8, 4, 2, 16, 16),
+    (200, 16, 8, 8, 32, 32),
+    (128, 10, 8, 1, 64, 48),   # MQA + dv != dk (MLA latent shape)
+])
+def test_aggregated_attention_kernel(s, kb, hq, hkv, dk, dv):
+    case = _agg_case(jax.random.PRNGKey(s + kb), s, kb, hq, hkv, dk, dv)
+    scale = 1.0 / np.sqrt(dk)
+    got = aggregated_attention_pallas(
+        *case, scale=scale, valid_len=s - 3, tile=64, interpret=True
+    )
+    want = ref.aggregated_attention_decode(*case, scale, s - 3)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_aggregated_attention_all_refined_equals_exact():
+    """refine=all ==> plain masked attention over the cache."""
+    s, kb, hq, hkv, dk = 96, 12, 4, 2, 16
+    case = list(_agg_case(jax.random.PRNGKey(0), s, kb, hq, hkv, dk, dk))
+    counts = case[6]
+    case[7] = counts > 0        # all non-empty buckets refined
+    scale = 1.0 / np.sqrt(dk)
+    got = aggregated_attention_pallas(
+        *case, scale=scale, valid_len=s, tile=64, interpret=True
+    )
+    # plain softmax attention reference
+    q, k_cache, v_cache = case[0], case[1], case[2]
+    group = hq // hkv
+    outs = []
+    for h in range(hq):
+        kvh = h // group
+        logits = (k_cache[:, kvh, :] @ q[h]) * scale
+        p = jax.nn.softmax(logits)
+        outs.append(p @ v_cache[:, kvh, :])
+    want = jnp.stack(outs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_aggregated_attention_quality_clustered():
+    """With clustered keys, partial refinement tracks exact attention
+    closely (the paper's small-accuracy-loss regime)."""
+    s, kb, hq, hkv, dk = 256, 32, 4, 2, 32
+    key = jax.random.PRNGKey(7)
+    centers = jax.random.normal(key, (kb, hkv, dk)) * 3.0
+    assign = jax.random.randint(jax.random.fold_in(key, 1), (s,), 0, kb)
+    k_cache = centers[assign] + 0.1 * jax.random.normal(
+        jax.random.fold_in(key, 2), (s, hkv, dk)
+    )
+    v_cache = jax.random.normal(jax.random.fold_in(key, 3), (s, hkv, dk))
+    q = centers[3].reshape(hkv, 1, dk).repeat(hq // hkv, 1).reshape(hq, dk)
+    counts = jax.ops.segment_sum(
+        jnp.ones((s,), jnp.int32), assign, num_segments=kb
+    )
+    mean_k = jax.vmap(
+        lambda h: jax.ops.segment_sum(
+            k_cache[:, h, :], assign, num_segments=kb
+        ), in_axes=0, out_axes=1,
+    )(jnp.arange(hkv)) / jnp.maximum(counts[:, None, None], 1)
+    mean_v = jax.vmap(
+        lambda h: jax.ops.segment_sum(
+            v_cache[:, h, :], assign, num_segments=kb
+        ), in_axes=0, out_axes=1,
+    )(jnp.arange(hkv)) / jnp.maximum(counts[:, None, None], 1)
+
+    scale = 1.0 / np.sqrt(dk)
+    # correlation-ranked refinement (stage 1 of Algorithm 1)
+    corr = jnp.max(
+        jnp.einsum("hd,Kd->hK", q.reshape(hq, dk)[:hkv], mean_k[:, 0]), 0
+    )
+    _, top = jax.lax.top_k(jnp.where(counts > 0, corr, -jnp.inf), 4)
+    refined = jnp.zeros((kb,), bool).at[top].set(True)
+
+    approx = ref.aggregated_attention_decode(
+        q, k_cache, v_cache, assign, mean_k, mean_v, counts, refined,
+        scale, s,
+    )
+    exact = ref.aggregated_attention_decode(
+        q, k_cache, v_cache, assign, mean_k, mean_v, counts, counts > 0,
+        scale, s,
+    )
+    cos = jnp.sum(approx * exact, -1) / (
+        jnp.linalg.norm(approx, axis=-1) * jnp.linalg.norm(exact, axis=-1)
+    )
+    assert float(jnp.min(cos)) > 0.98, np.asarray(cos)

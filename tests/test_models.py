@@ -1,0 +1,237 @@
+"""Model-layer numerics: decode-vs-forward parity, aggregated-KV exactness,
+flash-attention fwd/bwd vs reference, chunked-SSD vs naive recurrence."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import forward, init_caches, init_params, serve_step
+from repro.models import layers
+from repro.models.ssm import ssd_chunked
+
+B, S = 2, 12
+
+
+def _decode_seq(cfg, p, tokens, s_max=16):
+    caches = init_caches(jax.random.PRNGKey(9), cfg, batch=B, s_max=s_max)
+    pos = jnp.zeros((B,), jnp.int32)
+    outs = []
+    mp = jnp.zeros((3, B, 1), jnp.int32) if cfg.mrope else None
+    for t in range(tokens.shape[1]):
+        logits, caches = serve_step(
+            p, caches, tokens[:, t:t+1], pos, cfg, mrope_positions=mp
+        )
+        outs.append(logits)
+        pos = pos + 1
+    return jnp.stack(outs, axis=1)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "gemma3-1b", "zamba2-7b",
+                                  "xlstm-350m"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode == full causal forward (same logits)."""
+    cfg = get_config(arch, smoke=True)
+    p = init_params(jax.random.PRNGKey(1), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (B, S), 0,
+                                cfg.vocab_size)
+    full = forward(p, tokens, cfg)
+    dec = _decode_seq(cfg, p, tokens)
+    rel = float(jnp.max(jnp.abs(full - dec))) / float(
+        jnp.max(jnp.abs(full))
+    )
+    assert rel < 1e-4, rel
+
+
+def test_decode_matches_forward_mla_nodrop():
+    """MLA absorbed decode == materialized train attention (MoE no-drop)."""
+    cfg = get_config("deepseek-v2-236b", smoke=True).with_(
+        capacity_factor=100.0
+    )
+    p = init_params(jax.random.PRNGKey(1), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (B, S), 0,
+                                cfg.vocab_size)
+    full = forward(p, tokens, cfg)
+    dec = _decode_seq(cfg, p, tokens)
+    rel = float(jnp.max(jnp.abs(full - dec))) / float(
+        jnp.max(jnp.abs(full))
+    )
+    assert rel < 1e-4, rel
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "deepseek-v2-236b"])
+def test_aggregated_kv_full_refinement_exact(arch):
+    """Algorithm 1 invariant at the serving layer: refine_frac=1 == exact."""
+    kw = {"capacity_factor": 100.0} if arch == "deepseek-v2-236b" else {}
+    cfg = get_config(arch, smoke=True).with_(**kw)
+    p = init_params(jax.random.PRNGKey(1), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (B, S), 0,
+                                cfg.vocab_size)
+    exact = _decode_seq(cfg, p, tokens)
+    agg = _decode_seq(
+        cfg.with_(agg_kv=True, agg_compression=2, agg_refine_frac=1.0),
+        p, tokens,
+    )
+    np.testing.assert_allclose(
+        np.asarray(exact), np.asarray(agg), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_blockwise_sdpa_forward_and_grad():
+    key = jax.random.PRNGKey(0)
+    b, s, hkv, g, hd = 2, 256, 2, 2, 16
+    q = jax.random.normal(key, (b, s, hkv, g, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, 24))
+    scale = 1.0 / math.sqrt(hd)
+
+    def ref(q, k, v, causal, window):
+        logits = jnp.einsum("bskgd,btkd->bkgst", q, k) * scale
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(s)[None, :]
+        mask = jnp.ones((s, s), bool)
+        if causal:
+            mask &= j <= i
+        if window:
+            mask &= j > i - window
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, -1)
+        return jnp.einsum("bkgst,btkd->bskgd", p, v).reshape(
+            b, s, hkv * g, 24
+        )
+
+    for causal, window in [(True, None), (False, None), (True, 32)]:
+        got = layers.blockwise_sdpa(
+            q, k, v, scale=scale, causal=causal, window=window,
+            q_chunk=64, kv_chunk=64,
+        )
+        want = ref(q, k, v, causal, window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+        f_b = lambda q, k, v: jnp.sum(jnp.sin(layers.blockwise_sdpa(
+            q, k, v, scale=scale, causal=causal, window=window,
+            q_chunk=64, kv_chunk=64)))
+        f_r = lambda q, k, v: jnp.sum(jnp.sin(ref(q, k, v, causal, window)))
+        gb = jax.grad(f_b, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(f_r, argnums=(0, 1, 2))(q, k, v)
+        for a, bb in zip(gb, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                                       rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("g", [1, 2])
+def test_ssd_chunked_matches_recurrence(g):
+    key = jax.random.PRNGKey(0)
+    bsz, s, h, p, n = 2, 64, 4, 8, 16
+    xh = jax.random.normal(key, (bsz, s, h, p))
+    dt = jax.nn.softplus(
+        jax.random.normal(jax.random.fold_in(key, 1), (bsz, s, h))
+    )
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)))
+    b_ = jax.random.normal(jax.random.fold_in(key, 3), (bsz, s, g, n))
+    c_ = jax.random.normal(jax.random.fold_in(key, 4), (bsz, s, g, n))
+
+    rep = h // g
+    bf = jnp.repeat(b_, rep, axis=2)
+    cf = jnp.repeat(c_, rep, axis=2)
+    state = jnp.zeros((bsz, h, n, p))
+    ys = []
+    for t in range(s):
+        decay = jnp.exp(dt[:, t] * a[None, :])
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", bf[:, t], xh[:, t] * dt[:, t][..., None]
+        )
+        ys.append(jnp.einsum("bhnp,bhn->bhp", state, cf[:, t]))
+    want = jnp.stack(ys, 1)
+    got = ssd_chunked(xh, dt, a, b_, c_, chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_bucket_major_full_refinement_exact():
+    """§Perf C1 layout: refine=1.0 with ample capacity == exact decode."""
+    cfg = get_config("qwen3-8b", smoke=True)
+    p = init_params(jax.random.PRNGKey(1), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (B, S), 0,
+                                cfg.vocab_size)
+    exact = _decode_seq(cfg, p, tokens)
+    bm = _decode_seq(
+        cfg.with_(agg_kv=True, agg_layout="bucket_major",
+                  agg_compression=2, agg_refine_frac=1.0),
+        p, tokens,
+    )
+    np.testing.assert_allclose(np.asarray(exact), np.asarray(bm),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_bucket_major_matches_flat_layout():
+    """Same LSH family ⇒ flat and bucket-major layouts agree (no overflow)."""
+    cfg = get_config("qwen3-8b", smoke=True)
+    p = init_params(jax.random.PRNGKey(1), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (B, S), 0,
+                                cfg.vocab_size)
+    flat = _decode_seq(
+        cfg.with_(agg_kv=True, agg_layout="flat", agg_compression=2,
+                  agg_refine_frac=0.5), p, tokens,
+    )
+    bm = _decode_seq(
+        cfg.with_(agg_kv=True, agg_layout="bucket_major",
+                  agg_compression=2, agg_refine_frac=0.5), p, tokens,
+    )
+    np.testing.assert_allclose(np.asarray(flat), np.asarray(bm),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_bucket_major_overflow_preserves_information():
+    """Tokens beyond bucket capacity still influence attention (overflow
+    centroids) — the paper's never-discard principle."""
+    from repro.models import aggregated_kv as akv
+    key = jax.random.PRNGKey(0)
+    cache = akv.init_bucket_major(
+        key, batch=1, s_max=8, n_kv=1, dk=8, compression=4, slack=1
+    )  # 2 buckets x 4 slots: 8 inserts into ~2 buckets WILL overflow
+    ks = jax.random.normal(jax.random.fold_in(key, 1), (8, 1, 8))
+    vs = jax.random.normal(jax.random.fold_in(key, 2), (8, 1, 8))
+    for t in range(8):
+        cache = akv.insert_bucket_major(cache, ks[t][None], vs[t][None])
+    assert int(cache.counts.sum()) == 8
+    overflow = int(jnp.maximum(
+        cache.counts - cache.capacity, 0
+    ).sum())
+    # all-refined attention still sums weights over every token's mass
+    q = jax.random.normal(jax.random.fold_in(key, 3), (1, 2, 8))
+    out = akv.decode_attend_bucket_major(
+        q, cache, refine_frac=1.0, scale=0.35
+    )
+    assert bool(jnp.all(jnp.isfinite(out)))
+    if overflow > 0:
+        # overflow centroid carries nonzero mass
+        assert float(jnp.abs(cache.over_k).sum()) > 0.0
+
+
+def test_checkpointed_scan_matches_scan():
+    key = jax.random.PRNGKey(0)
+    xs = jax.random.normal(key, (64, 3))
+
+    def step(c, x):
+        c = jnp.tanh(c + x)
+        return c, c
+
+    init = jnp.zeros((3,))
+    want_c, want_ys = jax.lax.scan(step, init, xs)
+    got_c, got_ys = layers.checkpointed_scan(step, init, xs, chunk=16)
+    np.testing.assert_allclose(np.asarray(got_c), np.asarray(want_c),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_ys), np.asarray(want_ys),
+                               rtol=1e-6)
+    # gradient parity
+    f1 = lambda xs: jnp.sum(jax.lax.scan(step, init, xs)[1])
+    f2 = lambda xs: jnp.sum(
+        layers.checkpointed_scan(step, init, xs, chunk=16)[1]
+    )
+    np.testing.assert_allclose(
+        np.asarray(jax.grad(f1)(xs)), np.asarray(jax.grad(f2)(xs)),
+        rtol=1e-5,
+    )
