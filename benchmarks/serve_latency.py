@@ -1,0 +1,58 @@
+"""Serving-path latency benchmark: BENCH json from ``repro.serve``.
+
+Drives the anytime server with mixed kNN/CF traffic under three SLO
+classes (relaxed / tight / hopeless, derived from the calibrated cost
+model so the benchmark is hardware independent) and emits one ``BENCH``
+json line with p50/p99 latency of both anytime stages, the granted-eps
+distribution, the aggregate-cache hit rate, and total shuffle bytes —
+the accuracy-vs-deadline serving curve's raw material.
+
+    PYTHONPATH=src python -m benchmarks.serve_latency
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import emit
+from repro.serve.demo import build_demo_server, prepare_demo_server
+
+BATCH = 4
+WAVES = 4  # waves per SLO class
+
+
+def run():
+    server, queries, active, active_mask = build_demo_server(batch=BATCH)
+    # Calibration + prewarm + model-derived SLO classes; compiles and
+    # aggregate builds are deploy cost, excluded from the measured state.
+    slos = prepare_demo_server(server, batch=BATCH)
+    slos["cf"].pop("hopeless")  # escalation is exercised via the kNN class
+
+    def wave(kind, deadline_s, offset):
+        for i in range(BATCH):
+            if kind == "knn":
+                payload = (queries[(offset + i) % queries.shape[0]],)
+            else:
+                j = (offset + i) % active.shape[0]
+                payload = (active[j], active_mask[j])
+            server.submit(kind, payload, deadline_s=deadline_s)
+        return server.drain()
+
+    # Measured traffic: interleaved SLO classes per kind.
+    for w in range(WAVES):
+        for kind, classes in slos.items():
+            for deadline_s in classes.values():
+                wave(kind, deadline_s, offset=8 + w * BATCH)
+
+    summary = server.summary()
+    print("BENCH " + json.dumps({"serve_latency": summary}))
+    emit(
+        "serve_latency_stage1_p50", summary["stage1_latency_ms"]["p50"] * 1e3,
+        f"p99_ms={summary['stage1_latency_ms']['p99']:.2f};"
+        f"cache_hit_rate={summary['cache']['hit_rate']:.2f};"
+        f"deadline_met_rate={summary['deadline_met_rate']:.2f}",
+    )
+    return summary
+
+
+if __name__ == "__main__":
+    run()

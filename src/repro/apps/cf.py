@@ -25,11 +25,15 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core import aggregate as agg_lib
 from repro.core import correlation as corr_lib
+from repro.core import engine as engine_lib
 from repro.core import lsh as lsh_lib
 from repro.core import refine as refine_lib
 from repro.kernels import ops as kernel_ops
+from repro.serve import servable as serve_servable
 
 
 def user_means(ratings: jax.Array, mask: jax.Array) -> jax.Array:
@@ -278,6 +282,68 @@ def run_sampled(
         n_, d_ = sampled_map(r_, m_, active, active_mask, perm, n_sample=ns)
         num, den = num + n_, den + d_
     return predict(num, den, active, active_mask)
+
+
+# ---------------------------------------------------------------------------
+# serving adapter (repro.serve.Servable)
+# ---------------------------------------------------------------------------
+
+class CFServable(serve_servable.LSHServableBase):
+    """CF recommendation behind the ``repro.serve.Servable`` protocol.
+
+    One instance holds one neighbourhood shard (user rows of the rating
+    matrix).  Request payload: ``(active_row [I], active_mask_row [I])`` for
+    one active user; answer: predicted rating row [I] (numpy).  ``run``
+    executes ``accurateml_map`` through the MapReduce engine with a psum
+    combine into ``predict``.
+    """
+
+    name = "cf"
+
+    def __init__(
+        self,
+        ratings: jax.Array,
+        mask: jax.Array,
+        *,
+        lsh_key: jax.Array,
+        n_hashes: int = 4,
+        bucket_width: float = 8.0,
+        engine: engine_lib.MapReduce | None = None,
+    ):
+        super().__init__(
+            (ratings, mask), lsh_key=lsh_key, n_hashes=n_hashes,
+            bucket_width=bucket_width, engine=engine,
+        )
+        self.ratings = ratings
+        self.mask = mask
+
+    def build(self, compression_ratio: float) -> CFAggregates:
+        params = self._lsh_params(compression_ratio, self.ratings.shape[1])
+        return build_cf_aggregates(self.ratings, self.mask, params)
+
+    def probe_payload(self) -> tuple:
+        return (self.ratings[0], self.mask[0])
+
+    def pad_batch(self, payloads, batch: int) -> tuple:
+        return self.stack_pad(payloads, batch)
+
+    def run(
+        self, prepared: CFAggregates, batch_payload: tuple,
+        *, refine_budget: int,
+    ) -> jax.Array:
+        active, active_mask = batch_payload
+        map_fn = partial(accurateml_map, refine_budget=refine_budget)
+        combine = engine_lib.CombineSpec(
+            mode="psum",
+            reduce_fn=lambda nd: predict(nd[0], nd[1], active, active_mask),
+        )
+        return self.engine.run(
+            map_fn, combine, self.ratings, self.mask,
+            replicated_args=(prepared, active, active_mask),
+        )
+
+    def unpack(self, outputs: jax.Array, n: int) -> list:
+        return list(np.asarray(outputs[:n]))
 
 
 # ---------------------------------------------------------------------------

@@ -18,12 +18,15 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import aggregate as agg_lib
 from repro.core import correlation as corr_lib
+from repro.core import engine as engine_lib
 from repro.core import lsh as lsh_lib
 from repro.core import refine as refine_lib
 from repro.kernels import ops as kernel_ops
+from repro.serve import servable as serve_servable
 
 
 BIG = jnp.float32(3.0e38)
@@ -257,6 +260,76 @@ def run_sampled(
         shards_l.append(l)
     d, l = merge_topk(jnp.stack(shards_d), jnp.stack(shards_l), k)
     return majority_vote(d, l, n_classes)
+
+
+# ---------------------------------------------------------------------------
+# serving adapter (repro.serve.Servable)
+# ---------------------------------------------------------------------------
+
+class KNNServable(serve_servable.LSHServableBase):
+    """kNN classification behind the ``repro.serve.Servable`` protocol.
+
+    One instance holds one training shard.  ``build`` produces the cacheable
+    aggregates for a compression ratio; ``run`` executes ``accurateml_map``
+    through the MapReduce engine (all_gather combine: merge shard top-k,
+    majority-vote), so ``last_shuffle_bytes`` is metered on the serving path.
+    Request payload: ``(query_vector [D],)``; answer: predicted class (int).
+    """
+
+    name = "knn"
+
+    def __init__(
+        self,
+        train_x: jax.Array,
+        train_y: jax.Array,
+        *,
+        n_classes: int,
+        k: int = 5,
+        lsh_key: jax.Array,
+        n_hashes: int = 4,
+        bucket_width: float = 4.0,
+        engine: engine_lib.MapReduce | None = None,
+    ):
+        super().__init__(
+            (train_x, train_y), lsh_key=lsh_key, n_hashes=n_hashes,
+            bucket_width=bucket_width, engine=engine,
+        )
+        self.train_x = train_x
+        self.train_y = train_y
+        self.n_classes = n_classes
+        self.k = k
+
+    def build(self, compression_ratio: float) -> KNNAggregates:
+        params = self._lsh_params(compression_ratio, self.train_x.shape[1])
+        return build_knn_aggregates(
+            self.train_x, self.train_y, params, self.n_classes
+        )
+
+    def probe_payload(self) -> tuple:
+        return (self.train_x[0],)
+
+    def pad_batch(self, payloads, batch: int) -> tuple:
+        return self.stack_pad(payloads, batch)
+
+    def run(
+        self, prepared: KNNAggregates, batch_payload: tuple,
+        *, refine_budget: int,
+    ) -> jax.Array:
+        (test_x,) = batch_payload
+        map_fn = partial(accurateml_map, k=self.k, refine_budget=refine_budget)
+        combine = engine_lib.CombineSpec(
+            mode="all_gather",
+            reduce_fn=lambda g: majority_vote(
+                *merge_topk(g[0], g[1], self.k), self.n_classes
+            ),
+        )
+        return self.engine.run(
+            map_fn, combine, self.train_x, self.train_y,
+            replicated_args=(prepared, test_x),
+        )
+
+    def unpack(self, outputs: jax.Array, n: int) -> list:
+        return [int(v) for v in np.asarray(outputs[:n])]
 
 
 def accuracy(pred: jax.Array, truth: jax.Array) -> float:

@@ -73,8 +73,14 @@ class MapReduce:
     ) -> Any:
         if self.mesh is None:
             out = map_fn(*sharded_args, *replicated_args)
-            self.last_shuffle_bytes = _tree_bytes(
-                jax.eval_shape(map_fn, *sharded_args, *replicated_args)
+            # Identity combine keeps outputs shard-local: no shuffle, same as
+            # the mesh path reports.
+            self.last_shuffle_bytes = (
+                0
+                if combine.mode == "identity"
+                else _tree_bytes(
+                    jax.eval_shape(map_fn, *sharded_args, *replicated_args)
+                )
             )
             if combine.mode == "all_gather":
                 stacked = jax.tree_util.tree_map(lambda x: x[None], out)

@@ -14,6 +14,7 @@ CF app, and the aggregated-KV attention module.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable
 
 import jax
@@ -83,5 +84,10 @@ def two_stage(
 
 def eps_to_budget(n_points: int, eps_max: float) -> int:
     """Paper knob -> fixed-shape budget: eps_max is the max *fraction* of
-    original points processed during refinement."""
-    return int(jnp.ceil(eps_max * n_points)) if eps_max > 0 else 0
+    original points processed during refinement.
+
+    Host-side arithmetic on purpose: the budget is a *static* shape, so it
+    must never become a traced value (and ``jnp.ceil`` would force a device
+    round-trip per call).
+    """
+    return math.ceil(eps_max * n_points) if eps_max > 0 else 0

@@ -158,7 +158,7 @@ def _moe_ep_sharded(pm, x, cfg, parallel: ParallelContext):
     def body_rep(pl, xl):
         bl, sl, _ = xl.shape
         flat = xl.reshape(bl * sl, d).astype(jnp.float32)
-        n_ranks = jax.lax.axis_size(max_)
+        n_ranks = moe.axis_size(max_)
         rank = jax.lax.axis_index(max_)
         e_loc = cfg.n_experts // n_ranks
         out = moe.moe_apply_local(

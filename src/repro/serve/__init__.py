@@ -1,0 +1,66 @@
+"""repro.serve — anytime, deadline-aware serving of AccurateML workloads.
+
+Design (request -> deadline -> (r, eps) -> anytime response)
+============================================================
+
+The paper's two-stage algorithm is an *anytime* algorithm: stage 1 answers
+from aggregated points in O(N/r), stage 2 spends eps*N more work refining
+the top-correlated buckets toward the exact answer.  Offline, (r, eps) are
+static job knobs; this subsystem turns them into per-request serving knobs
+driven by each request's latency SLO.
+
+Life of a request::
+
+    submit(kind, payload, deadline_s)
+        |                                  repro.serve.scheduler
+        v
+    [ ContinuousBatcher ]  heterogeneous queue; emits kind-homogeneous,
+        |                  SLO-class-compatible batches padded to a bounded
+        |                  set of shapes (one jit signature per shape)
+        v
+    [ DeadlineController ] repro.serve.deadline — maps the batch's tightest
+        |                  remaining budget through CostModel.solve_eps and
+        |                  BudgetPolicy into a Grant(compression_ratio, eps):
+        |                  load degrades eps, never correctness; below the
+        |                  eps floor it escalates (should_reexecute) to a
+        |                  relaxed-deadline full-eps re-execution
+        v
+    [ AggregateCache ]     repro.serve.cache — stage-1 aggregates built once
+        |                  per (dataset shard, LSHConfig), LRU + hit metering
+        v
+    [ Servable.run ]       the workload's two-stage map + combine on the
+        |                  MapReduce engine (shuffle bytes metered); stage 1
+        |                  executes first and its answers are released
+        |                  immediately (on_stage1), stage 2 only if granted
+        v
+    Response(stage1, refined, eps_granted, stage1/total latency, ...)
+        |
+    [ ServeMetrics ]       repro.serve.metrics — p50/p99 of both anytime
+                           latencies, granted-eps stats, deadline-met rate,
+                           cache hit rate, shuffle bytes
+
+Workloads implement the small ``Servable`` protocol (repro.serve.request);
+``repro.apps.knn.KNNServable`` and ``repro.apps.cf.CFServable`` are the two
+shipped instances, and aggregated-KV decode steps fit the same contract
+(the bucketed KV cache is the "dataset shard", a decode step the query).
+"""
+from repro.serve.cache import AggregateCache
+from repro.serve.deadline import DeadlineController, Grant
+from repro.serve.metrics import ServeMetrics, percentile
+from repro.serve.request import Request, Response, Servable
+from repro.serve.scheduler import ContinuousBatcher, ScheduledBatch
+from repro.serve.server import Server
+
+__all__ = [
+    "AggregateCache",
+    "ContinuousBatcher",
+    "DeadlineController",
+    "Grant",
+    "Request",
+    "Response",
+    "ScheduledBatch",
+    "Servable",
+    "ServeMetrics",
+    "Server",
+    "percentile",
+]

@@ -1,0 +1,75 @@
+"""Aggregate cache: build stage-1 aggregates once, reuse across requests.
+
+The expensive part of AccurateML's map task is not stage 1 itself but the
+aggregation *generation* (LSH projection + segment sums + the perm/offsets
+index).  Offline, the paper amortizes it across one job; online, the same
+aggregates serve every request that hits the same (dataset shard, LSHConfig)
+pair — so the cache key is exactly that pair (delegated to
+``Servable.cache_key``, which fingerprints the shard's data and the LSH
+hyper-parameters its compression ratio maps to).
+
+LRU with hit/miss metering; the hit rate is a first-class serving metric
+(``ServeMetrics`` folds it into the BENCH summary).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Hashable
+
+from repro.serve.request import Servable
+
+
+class AggregateCache:
+    """LRU cache of built aggregates keyed by (dataset shard, LSHConfig)."""
+
+    def __init__(self, capacity: int = 32):
+        if capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        self.capacity = capacity
+        self._entries: OrderedDict[Hashable, Any] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get_or_build(
+        self, servable: Servable, compression_ratio: float
+    ) -> tuple[Any, bool]:
+        """Return (prepared aggregates, was_hit)."""
+        key = (servable.name, servable.cache_key(compression_ratio))
+        if key in self._entries:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return self._entries[key], True
+        self.misses += 1
+        prepared = servable.build(compression_ratio)
+        self._entries[key] = prepared
+        if len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return prepared, False
+
+    def invalidate(self, servable: Servable) -> int:
+        """Drop every entry of one servable (e.g. its shard was updated)."""
+        stale = [k for k in self._entries if k[0] == servable.name]
+        for k in stale:
+            del self._entries[k]
+        return len(stale)
+
+    def reset_stats(self) -> None:
+        """Zero the meters (entries stay cached) — e.g. after warmup."""
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / total if total else 0.0,
+            "size": len(self._entries),
+            "evictions": self.evictions,
+        }

@@ -1,0 +1,83 @@
+"""Reference serving fixture shared by the example and the benchmark.
+
+``examples/serve_aggregated.py`` (the demo) and
+``benchmarks/serve_latency.py`` (the BENCH emitter) must measure the same
+system: same synthetic datasets, servable hyper-parameters, budget policy,
+and SLO derivation.  Keeping that setup here prevents the two from
+silently diverging.
+
+SLO classes are derived from the *fitted* cost model (not hard-coded
+milliseconds) so the behaviour — relaxed fits full eps_max, tight fits a
+sliver, hopeless escalates — is hardware independent.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.apps.cf import CFServable
+from repro.apps.knn import KNNServable
+from repro.core.budget import BudgetPolicy
+from repro.data.synthetic import make_mfeat_like, make_netflix_like
+from repro.serve.deadline import DeadlineController
+from repro.serve.scheduler import ContinuousBatcher
+from repro.serve.server import Server
+
+KNN_D, CF_ITEMS, N_CLASSES = 48, 384, 10
+
+
+def build_demo_server(
+    *, knn_points: int = 16_384, cf_users: int = 3_072, batch: int = 4,
+):
+    """Server over synthetic kNN + CF shards; returns (server, queries,
+    active, active_mask)."""
+    key = jax.random.PRNGKey(0)
+    x, y = make_mfeat_like(
+        key, n_points=knn_points + 64, n_features=KNN_D,
+        n_classes=N_CLASSES, modes_per_class=24, mode_scale=0.5,
+    )
+    knn = KNNServable(
+        x[64:], y[64:], n_classes=N_CLASSES, k=5,
+        lsh_key=jax.random.PRNGKey(7),
+    )
+    ratings, mask = make_netflix_like(
+        jax.random.fold_in(key, 1), n_users=cf_users, n_items=CF_ITEMS,
+        density=0.12,
+    )
+    cf = CFServable(
+        ratings[8:] * mask[8:], mask[8:], lsh_key=jax.random.PRNGKey(8)
+    )
+    policy = BudgetPolicy(
+        compression_ratio=20.0, eps_max=0.32, degrade_floor=0.004
+    )
+    server = Server(
+        [knn, cf],
+        controller=DeadlineController(policy),
+        batcher=ContinuousBatcher(max_batch=batch, pad_sizes=(batch,)),
+    )
+    return server, x[:64], ratings[:8] * mask[:8], mask[:8]
+
+
+def prepare_demo_server(server: Server, *, batch: int = 4) -> dict:
+    """Calibrate, freeze the online correction, prewarm, derive SLO classes.
+
+    Freezing ``ema`` makes grants a deterministic function of the fitted
+    model, so warmup and measured traffic receive identical budgets.
+    Returns ``{kind: {class_name: deadline_s}}``.
+    """
+    ctl = server.controller
+    for kind in server.servables:
+        server.calibrate(kind, batch=batch)
+    ctl.ema = 0.0
+    for kind in server.servables:
+        server.prewarm(kind, batch=batch)
+    server.reset_metrics()
+
+    slos: dict = {}
+    for kind, servable in server.servables.items():
+        n = servable.n_points
+        slos[kind] = {
+            "relaxed": 1.5 * ctl.deadline_for(kind, n, ctl.policy.eps_max),
+            "tight": 1.15 * ctl.deadline_for(kind, n, 0.02),
+            "hopeless": 0.25 * ctl.deadline_for(kind, n, 0.0),
+        }
+    return slos

@@ -1,0 +1,99 @@
+"""Serving metrics: latency percentiles, granted eps, cache hits, shuffle bytes.
+
+One record per answered request, aggregated into the summary the BENCH
+harness emits.  Latency is recorded twice per the anytime contract:
+``stage1_latency_s`` (admission -> initial answer) and ``total_latency_s``
+(admission -> best answer), so the accuracy-vs-deadline trade-off the paper
+plots offline falls out of the serving path directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from repro.serve.request import Response
+
+
+def percentile(values: Sequence[float], p: float) -> float:
+    """Linear-interpolated percentile (p in [0, 100]); nan on empty input."""
+    if not values:
+        return math.nan
+    return float(np.percentile(list(values), p))
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    """Accumulates per-request records and batch-level counters."""
+
+    responses: list[Response] = dataclasses.field(default_factory=list)
+    shuffle_bytes_total: int = 0
+    n_batches: int = 0
+    occupancy_total: int = 0
+
+    def record(self, response: Response) -> None:
+        self.responses.append(response)
+
+    def record_batch(self, shuffle_bytes: int, occupancy: int = 0) -> None:
+        self.n_batches += 1
+        self.shuffle_bytes_total += shuffle_bytes
+        self.occupancy_total += occupancy
+
+    def reset(self) -> None:
+        """Drop all records (e.g. after a jit/cache warmup phase)."""
+        self.responses.clear()
+        self.shuffle_bytes_total = 0
+        self.n_batches = 0
+        self.occupancy_total = 0
+
+    # ------------------------------------------------------------------
+    def summary(self, cache_stats: dict | None = None) -> dict:
+        rs = self.responses
+        # Re-execution rows carry a server-invented relaxed deadline; they
+        # are real work (latency, eps, shuffle) but must not count toward
+        # SLO attainment or request volume — that would double-count every
+        # escalated request and flatter deadline_met_rate.
+        firsts = [r for r in rs if not r.reexecuted]
+        stage1_ms = [r.stage1_latency_s * 1e3 for r in rs]
+        total_ms = [r.total_latency_s * 1e3 for r in rs]
+        eps = [r.eps_granted for r in rs]
+        out = {
+            "n_requests": len(firsts),
+            "n_reexecutions": len(rs) - len(firsts),
+            "n_batches": self.n_batches,
+            "stage1_latency_ms": {
+                "p50": percentile(stage1_ms, 50),
+                "p99": percentile(stage1_ms, 99),
+            },
+            "total_latency_ms": {
+                "p50": percentile(total_ms, 50),
+                "p99": percentile(total_ms, 99),
+            },
+            "eps_granted": {
+                "mean": sum(eps) / len(eps) if eps else math.nan,
+                "min": min(eps) if eps else math.nan,
+                "max": max(eps) if eps else math.nan,
+            },
+            "deadline_met_rate": (
+                sum(1 for r in firsts if r.deadline_met) / len(firsts)
+                if firsts else math.nan
+            ),
+            "refined_rate": (
+                sum(1 for r in rs if r.refined is not None) / len(rs)
+                if rs else math.nan
+            ),
+            "escalated_rate": (
+                sum(1 for r in firsts if r.escalated) / len(firsts)
+                if firsts else math.nan
+            ),
+            "shuffle_bytes_total": self.shuffle_bytes_total,
+            "mean_batch_occupancy": (
+                self.occupancy_total / self.n_batches
+                if self.n_batches else math.nan
+            ),
+        }
+        if cache_stats is not None:
+            out["cache"] = dict(cache_stats)
+        return out

@@ -1,0 +1,104 @@
+"""Request/response types and the ``Servable`` workload protocol.
+
+A ``Request`` is one user query against a named workload ("knn", "cf", ...)
+with a latency SLO.  The server answers it *anytime*-style: the ``Response``
+always carries the stage-1 (aggregated) answer, and additionally the refined
+answer whenever the deadline left room for stage 2.  Both stages' latencies
+are recorded so accuracy-vs-deadline curves can be drawn from the serving
+path itself.
+
+``Servable`` is the contract an application implements to be admitted by the
+scheduler.  It deliberately mirrors the offline Algorithm-1 decomposition:
+``build`` produces the cacheable aggregates for one compression ratio (the
+expensive LSH + segment-sum pass), ``run`` executes the two-stage map +
+combine for a fixed-shape query batch at a static ``refine_budget``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Hashable, Protocol, Sequence, runtime_checkable
+
+
+_rid_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One admitted query with a latency SLO."""
+
+    kind: str                    # servable name ("knn", "cf", ...)
+    payload: tuple               # per-query arrays (servable-specific)
+    deadline_s: float            # SLO: seconds from arrival to answer
+    arrival_t: float             # server clock at admission
+    rid: int = dataclasses.field(default_factory=lambda: next(_rid_counter))
+    reexecution: bool = False    # escalated re-run of an earlier request
+    on_stage1: Callable[[int, Any], None] | None = None
+
+    def remaining(self, now: float) -> float:
+        return self.deadline_s - (now - self.arrival_t)
+
+
+@dataclasses.dataclass
+class Response:
+    """Anytime answer: stage-1 always, refined when the budget allowed it."""
+
+    rid: int
+    kind: str
+    stage1: Any                    # initial answer from aggregates
+    refined: Any | None            # stage-2 answer (None if budget ran out)
+    eps_granted: float             # refinement fraction the controller gave
+    compression_ratio: float
+    deadline_s: float
+    queue_wait_s: float            # admission -> batch start
+    stage1_latency_s: float        # admission -> stage-1 answer ready
+    total_latency_s: float         # admission -> final answer ready
+    deadline_met: bool             # stage-1 answer inside the SLO?
+    escalated: bool = False        # eps fell below the policy floor
+    reexecuted: bool = False       # answer came from the re-execution path
+    cache_hit: bool = False        # aggregates served from the cache
+    batch_size: int = 0            # real requests packed into the batch
+
+    @property
+    def answer(self) -> Any:
+        """Best available answer (the anytime contract)."""
+        return self.refined if self.refined is not None else self.stage1
+
+
+@runtime_checkable
+class Servable(Protocol):
+    """What a workload provides to be served.
+
+    Shapes: ``pad_batch`` must return arrays whose leading axis is exactly
+    ``batch`` (the scheduler's quantized size) so ``run`` hits a bounded set
+    of jit signatures; ``unpack`` slices the first ``n`` real answers back
+    out.
+    """
+
+    name: str
+    n_points: int            # original points per shard — the N of eps_to_budget
+    last_shuffle_bytes: int  # metered by the servable's MapReduce engine
+
+    def cache_key(self, compression_ratio: float) -> Hashable:
+        """Key identifying (dataset shard, LSHConfig) for the aggregate cache."""
+        ...
+
+    def build(self, compression_ratio: float) -> Any:
+        """Build the stage-1 aggregates (LSH + segment sums). Cacheable."""
+        ...
+
+    def probe_payload(self) -> tuple:
+        """One representative payload for cost-model calibration probes."""
+        ...
+
+    def pad_batch(self, payloads: Sequence[tuple], batch: int) -> tuple:
+        """Stack per-request payloads into one fixed-shape batch."""
+        ...
+
+    def run(self, prepared: Any, batch_payload: tuple, *, refine_budget: int) -> Any:
+        """Two-stage map + combine for the whole batch at a static budget."""
+        ...
+
+    def unpack(self, outputs: Any, n: int) -> list:
+        """Split batched outputs into the first ``n`` per-request answers."""
+        ...

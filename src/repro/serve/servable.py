@@ -1,0 +1,103 @@
+"""Shared plumbing for servables whose aggregates come from p-stable LSH.
+
+Both shipped workloads (kNN, CF) follow the same pattern: a fixed dataset
+shard, an ``LSHConfig`` derived from the requested compression ratio, a
+``MapReduce`` engine for the map + combine (which meters shuffle bytes),
+and a cache key of (dataset fingerprint, LSHConfig).  The cache key is a
+correctness contract — two servables with different data or hyper-params
+must never alias — so it lives here, in one place, rather than hand-synced
+per workload.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine as engine_lib
+from repro.core import lsh as lsh_lib
+
+
+def _checksum(a: jax.Array) -> float:
+    """Position-sensitive content checksum (permutations change it)."""
+    flat = a.ravel().astype(jnp.float32)
+    weights = jnp.cos(jnp.arange(flat.shape[0], dtype=jnp.float32) * 0.73)
+    return float(jnp.dot(flat, weights))
+
+
+class LSHServableBase:
+    """Engine/fingerprint/cache-key plumbing shared by LSH-backed servables.
+
+    Subclasses pass their dataset arrays (leading dim = original points) to
+    ``__init__`` and implement ``build``/``probe_payload``/``pad_batch``/
+    ``run``/``unpack`` plus a class-level ``name``.
+    """
+
+    name: str = "lsh"
+
+    def __init__(
+        self,
+        data_arrays: tuple[jax.Array, ...],
+        *,
+        lsh_key: jax.Array,
+        n_hashes: int,
+        bucket_width: float,
+        engine: engine_lib.MapReduce | None = None,
+    ):
+        self.lsh_key = lsh_key
+        # Hashable form of the PRNG key: different projection seeds over
+        # the same data must not alias in the aggregate cache.
+        self._lsh_key_data = tuple(
+            int(v) for v in jax.numpy.ravel(
+                jax.random.key_data(lsh_key)
+                if jax.dtypes.issubdtype(lsh_key.dtype, jax.dtypes.prng_key)
+                else lsh_key
+            )
+        )
+        self.n_hashes = n_hashes
+        self.bucket_width = bucket_width
+        self.engine = engine or engine_lib.MapReduce()
+        self.n_points = int(data_arrays[0].shape[0])
+        # Cheap shard fingerprint: shape, dtype, and a *position-weighted*
+        # checksum per array — a plain sum would be permutation-invariant,
+        # so a row-shuffled shard would alias its predecessor's cached
+        # aggregates (whose perm/offsets index the old row order).
+        self._fingerprint = tuple(
+            (a.shape, str(a.dtype), _checksum(a)) for a in data_arrays
+        )
+
+    @property
+    def last_shuffle_bytes(self) -> int:
+        return self.engine.last_shuffle_bytes
+
+    def _lsh_config(self, compression_ratio: float) -> lsh_lib.LSHConfig:
+        return lsh_lib.config_for_compression(
+            self.n_points, compression_ratio, n_hashes=self.n_hashes,
+            bucket_width=self.bucket_width,
+        )
+
+    def _lsh_params(self, compression_ratio: float, n_features: int):
+        return lsh_lib.init_lsh(
+            self.lsh_key, n_features, self._lsh_config(compression_ratio)
+        )
+
+    def cache_key(self, compression_ratio: float):
+        cfg = self._lsh_config(compression_ratio)
+        return (
+            self._fingerprint, self._lsh_key_data,
+            cfg.n_hashes, cfg.bucket_width, cfg.n_buckets,
+        )
+
+    @staticmethod
+    def stack_pad(payloads, batch: int) -> tuple:
+        """Stack per-request payload columns and zero-pad each to ``batch``
+        rows — the fixed-shape contract of ``Servable.pad_batch``."""
+        out = []
+        for col in zip(*payloads):
+            arr = jnp.stack(col)
+            if arr.shape[0] < batch:
+                pad = jnp.zeros(
+                    (batch - arr.shape[0],) + arr.shape[1:], arr.dtype
+                )
+                arr = jnp.concatenate([arr, pad], axis=0)
+            out.append(arr)
+        return tuple(out)

@@ -1,0 +1,285 @@
+"""The serving loop: admit -> batch -> grant -> anytime answer -> record.
+
+``Server`` glues the subsystem together around the existing core:
+
+  * ``ContinuousBatcher`` packs heterogeneous requests into kind-homogeneous
+    fixed-shape batches,
+  * ``DeadlineController`` turns the batch's tightest remaining SLO into a
+    ``(compression_ratio, eps)`` grant through ``CostModel``/``BudgetPolicy``,
+  * ``AggregateCache`` reuses stage-1 aggregates across requests,
+  * the servable executes the two-stage map + combine on ``MapReduce`` (so
+    shuffle bytes are metered from the same code path the benchmarks use),
+  * ``ServeMetrics`` records both anytime latencies per request.
+
+Execution of one batch is the anytime contract in miniature: stage 1 runs
+first and its answers are released immediately (per-request ``on_stage1``
+callbacks fire before refinement starts); stage 2 runs only when the grant
+left budget for it.  Escalated requests (grant below the eps floor) are
+answered stage-1-only inside their SLO and re-queued as a relaxed-deadline
+re-execution that refines at full ``eps_max`` — the serving analogue of the
+paper's re-execute-instead-of-approximate straggler rule.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Iterable
+
+import jax
+
+from repro.core.budget import BudgetPolicy
+from repro.core.refine import eps_to_budget
+from repro.serve.cache import AggregateCache
+from repro.serve.deadline import DeadlineController
+from repro.serve.metrics import ServeMetrics
+from repro.serve.request import Request, Response, Servable
+from repro.serve.scheduler import ContinuousBatcher, ScheduledBatch
+
+# Escalated requests re-execute with this multiple of their original SLO.
+REEXEC_DEADLINE_FACTOR = 8.0
+
+
+class Server:
+    """Synchronous-loop anytime server over a set of ``Servable`` workloads."""
+
+    def __init__(
+        self,
+        servables: Iterable[Servable],
+        *,
+        policy: BudgetPolicy | None = None,
+        controller: DeadlineController | None = None,
+        batcher: ContinuousBatcher | None = None,
+        cache: AggregateCache | None = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        self.servables: dict[str, Servable] = {s.name: s for s in servables}
+        if not self.servables:
+            raise ValueError("need at least one servable")
+        if policy is not None and controller is not None:
+            raise ValueError("pass either policy or controller, not both")
+        self.controller = controller or DeadlineController(policy)
+        self.batcher = batcher or ContinuousBatcher()
+        self.cache = cache or AggregateCache()
+        self.metrics = ServeMetrics()
+        self.clock = clock
+        # (kind, padded_size, refine_budget) combos already executed once:
+        # first executions pay jit compile, so their wall time must not
+        # feed the controller's cost correction.
+        self._seen_combos: set[tuple] = set()
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def submit(
+        self, kind: str, payload: tuple, deadline_s: float,
+        *, on_stage1: Callable[[int, Any], None] | None = None,
+    ) -> int:
+        if kind not in self.servables:
+            raise KeyError(f"unknown workload kind: {kind!r}")
+        req = Request(
+            kind=kind, payload=payload, deadline_s=deadline_s,
+            arrival_t=self.clock(), on_stage1=on_stage1,
+        )
+        self.batcher.submit(req)
+        return req.rid
+
+    # ------------------------------------------------------------------
+    # calibration
+    # ------------------------------------------------------------------
+    def calibrate(self, kind: str, *, batch: int | None = None) -> None:
+        """Fit the kind's CostModel from two timed probe batches.
+
+        Probes run at the scheduler's largest pad size by default, so the
+        fitted per-point costs are conservative for smaller batches.  The
+        probe also warms the jit cache and the aggregate cache for the
+        policy's compression ratio.
+        """
+        servable = self.servables[kind]
+        policy = self.controller.policy
+        r = policy.compression_ratio
+        prepared, _ = self.cache.get_or_build(servable, r)
+        n_pad = batch or self.batcher.pad_sizes[-1]
+        probe = servable.pad_batch([servable.probe_payload()], n_pad)
+        eps1 = max(policy.eps_max, self.controller.eps_grid[1])
+        budget1 = eps_to_budget(servable.n_points, eps1)
+
+        def timed(refine_budget: int) -> float:
+            # Warmup (compile), then median-of-3: robust to scheduler noise
+            # without the systematic underestimate a min would give (grants
+            # sized from an underestimate miss their deadlines).
+            jax.block_until_ready(
+                servable.run(prepared, probe, refine_budget=refine_budget)
+            )
+            ts = []
+            for _ in range(3):
+                t0 = self.clock()
+                jax.block_until_ready(
+                    servable.run(prepared, probe, refine_budget=refine_budget)
+                )
+                ts.append(self.clock() - t0)
+            return sorted(ts)[1]
+
+        t_eps0 = timed(0)
+        t_eps1 = timed(budget1)
+        self.controller.fit_from_probes(
+            kind, servable.n_points, r, t_eps0, t_eps1, eps1
+        )
+
+    def prewarm(
+        self, kind: str, *, batch: int | None = None,
+        eps_values: Iterable[float] | None = None,
+    ) -> None:
+        """Compile every (shape, refine_budget) combo serving can grant.
+
+        The controller only grants grid eps values <= eps_max, so warming
+        those budgets (plus stage 1) removes jit compiles — and the
+        aggregate build — from steady-state latency.  With ``batch`` set
+        only that pad size is warmed (cheap, for servers pinned to one
+        shape); by default every scheduler pad size is covered.
+        """
+        servable = self.servables[kind]
+        ctl = self.controller
+        prepared, _ = self.cache.get_or_build(
+            servable, ctl.policy.compression_ratio
+        )
+        if eps_values is None:
+            eps_values = [e for e in ctl.eps_grid if e <= ctl.policy.eps_max]
+        budgets = {0} | {
+            eps_to_budget(servable.n_points, e) for e in eps_values
+        }
+        pads = (batch,) if batch is not None else self.batcher.pad_sizes
+        for n_pad in pads:
+            probe = servable.pad_batch([servable.probe_payload()], n_pad)
+            for b in sorted(budgets):
+                jax.block_until_ready(
+                    servable.run(prepared, probe, refine_budget=b)
+                )
+                self._seen_combos.add((kind, n_pad, b))
+
+    # ------------------------------------------------------------------
+    # serving loop
+    # ------------------------------------------------------------------
+    def step(self) -> list[Response]:
+        """Schedule and execute one batch; return its responses."""
+        now = self.clock()
+        batch = self.batcher.next_batch(now)
+        if batch is None:
+            return []
+        return self._execute(batch)
+
+    def drain(self) -> list[Response]:
+        """Run until the queue (including escalation re-runs) is empty."""
+        out: list[Response] = []
+        while len(self.batcher):
+            out.extend(self.step())
+        return out
+
+    # ------------------------------------------------------------------
+    def _execute(self, batch: ScheduledBatch) -> list[Response]:
+        servable = self.servables[batch.kind]
+        reexecution = all(r.reexecution for r in batch.requests)
+        t_start = self.clock()
+
+        if reexecution:
+            # Fault path: refine at full eps, no deadline pressure.
+            grant = self.controller.grant(
+                batch.kind, servable.n_points, float("inf")
+            )
+        else:
+            grant = self.controller.grant(
+                batch.kind, servable.n_points, batch.min_remaining(t_start)
+            )
+
+        prepared, cache_hit = self.cache.get_or_build(
+            servable, grant.compression_ratio
+        )
+        padded = servable.pad_batch(
+            [r.payload for r in batch.requests], batch.padded_size
+        )
+        combos = {(batch.kind, batch.padded_size, 0)}
+        if grant.refine_budget > 0:
+            combos.add((batch.kind, batch.padded_size, grant.refine_budget))
+        warmed = combos <= self._seen_combos
+        shuffle_bytes = 0
+
+        # ---- stage 1: immediate aggregated answers ----
+        s1_out = jax.block_until_ready(
+            servable.run(prepared, padded, refine_budget=0)
+        )
+        t_stage1 = self.clock()
+        shuffle_bytes += servable.last_shuffle_bytes
+        stage1_answers = servable.unpack(s1_out, batch.n)
+        for req, ans in zip(batch.requests, stage1_answers):
+            if req.on_stage1 is not None:
+                req.on_stage1(req.rid, ans)
+
+        # ---- stage 2: refine if the grant left budget for it ----
+        refined_answers: list[Any] | None = None
+        if grant.refine_budget > 0:
+            ref_out = jax.block_until_ready(
+                servable.run(
+                    prepared, padded, refine_budget=grant.refine_budget
+                )
+            )
+            shuffle_bytes += servable.last_shuffle_bytes
+            refined_answers = servable.unpack(ref_out, batch.n)
+        t_end = self.clock()
+
+        # Cold batches (fresh compile or aggregate build) are deploy cost,
+        # not steady-state serving cost: keep them out of the correction.
+        if warmed and cache_hit:
+            self.controller.observe(
+                batch.kind, grant.predicted_s, t_end - t_start
+            )
+        self._seen_combos |= combos
+        self.metrics.record_batch(shuffle_bytes, occupancy=batch.n)
+
+        responses = []
+        for i, req in enumerate(batch.requests):
+            stage1_latency = t_stage1 - req.arrival_t
+            total_latency = (
+                t_end - req.arrival_t if refined_answers is not None
+                else stage1_latency
+            )
+            resp = Response(
+                rid=req.rid,
+                kind=req.kind,
+                stage1=stage1_answers[i],
+                refined=refined_answers[i] if refined_answers else None,
+                eps_granted=grant.eps,
+                compression_ratio=grant.compression_ratio,
+                deadline_s=req.deadline_s,
+                queue_wait_s=t_start - req.arrival_t,
+                stage1_latency_s=stage1_latency,
+                total_latency_s=total_latency,
+                deadline_met=stage1_latency <= req.deadline_s,
+                escalated=grant.escalate,
+                reexecuted=req.reexecution,
+                cache_hit=cache_hit,
+                batch_size=batch.n,
+            )
+            responses.append(resp)
+            self.metrics.record(resp)
+            if grant.escalate and not req.reexecution:
+                self._requeue_for_reexecution(req)
+        return responses
+
+    def _requeue_for_reexecution(self, req: Request) -> None:
+        self.batcher.submit(
+            Request(
+                kind=req.kind,
+                payload=req.payload,
+                deadline_s=req.deadline_s * REEXEC_DEADLINE_FACTOR,
+                arrival_t=self.clock(),
+                rid=req.rid,            # same logical request, second answer
+                reexecution=True,
+            )
+        )
+
+    # ------------------------------------------------------------------
+    def reset_metrics(self) -> None:
+        """Zero request/batch/cache meters (after a warmup phase)."""
+        self.metrics.reset()
+        self.cache.reset_stats()
+
+    def summary(self) -> dict:
+        return self.metrics.summary(cache_stats=self.cache.stats())

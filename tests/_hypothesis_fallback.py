@@ -1,0 +1,54 @@
+"""Minimal deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The CI container doesn't ship ``hypothesis`` and the test environment must
+not install packages, so property tests fall back to this shim: ``@given``
+runs the test body over ``max_examples`` pseudo-random draws from a fixed
+seed.  That keeps the properties *exercised* (instead of skipping the whole
+module at collection) at the cost of hypothesis's shrinking and coverage
+heuristics.  When the real package is available, the test modules import it
+instead — this file is the tracked reason the seed suite collects either
+way.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+_SEED = 0xACC0_13
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(min_value: int = 0, max_value: int = 2**30) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+strategies = types.SimpleNamespace(integers=_integers, floats=_floats)
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        def wrapper():
+            rng = random.Random(_SEED)
+            for _ in range(getattr(wrapper, "_max_examples", 10)):
+                fn(**{k: s.draw(rng) for k, s in strats.items()})
+        # No functools.wraps: pytest would follow __wrapped__ and treat the
+        # strategy parameters as fixtures.  Copy only the display names.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

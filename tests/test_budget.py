@@ -1,0 +1,83 @@
+"""Tests for the CostModel/BudgetPolicy pair behind the deadline controller."""
+import math
+
+from repro.core.budget import BudgetPolicy, CostModel
+from repro.core.refine import eps_to_budget
+
+
+def test_fit_solve_round_trip():
+    """fit() from two probes recovers a model whose solve_eps inverts predict()."""
+    true = CostModel(c_fixed=0.0, c_stage1=2e-5, c_stage2=3e-6)
+    n, r, eps1 = 10_000, 20.0, 0.25
+    t0 = true.predict(n, r, 0.0)
+    t1 = true.predict(n, r, eps1)
+    fitted = CostModel.fit(n, r, t0, t1, eps1)
+    assert math.isclose(fitted.c_stage1, true.c_stage1, rel_tol=1e-9)
+    assert math.isclose(fitted.c_stage2, true.c_stage2, rel_tol=1e-9)
+    # Round trip: the budget that predict() quotes for an eps solves back
+    # to that same eps.
+    for eps in (0.0, 0.05, 0.3, 0.9):
+        budget = fitted.predict(n, r, eps)
+        solved = fitted.solve_eps(n, r, budget, eps_max=1.0)
+        assert math.isclose(solved, eps, rel_tol=1e-9, abs_tol=1e-12), (
+            eps, solved
+        )
+
+
+def test_fit_with_fixed_cost():
+    true = CostModel(c_fixed=1e-3, c_stage1=1e-5, c_stage2=2e-6)
+    n, r, eps1 = 5_000, 10.0, 0.5
+    fitted = CostModel.fit(
+        n, r, true.predict(n, r, 0.0), true.predict(n, r, eps1), eps1,
+        t_fixed=true.c_fixed,
+    )
+    assert math.isclose(fitted.c_stage1, true.c_stage1, rel_tol=1e-9)
+    assert math.isclose(fitted.c_stage2, true.c_stage2, rel_tol=1e-9)
+
+
+def test_solve_eps_clipping():
+    m = CostModel(c_fixed=0.0, c_stage1=1e-5, c_stage2=1e-6)
+    n, r = 1_000, 10.0
+    # Budget dwarfing any refinement cost -> clipped to eps_max.
+    assert m.solve_eps(n, r, 1e6, eps_max=0.4) == 0.4
+    # Budget below the stage-1 floor -> 0, never negative.
+    assert m.solve_eps(n, r, 0.0, eps_max=0.4) == 0.0
+    # Degenerate model (no stage-2 cost): all-or-nothing on the spare sign.
+    free = CostModel(c_fixed=0.0, c_stage1=1e-5, c_stage2=0.0)
+    assert free.solve_eps(n, r, 1.0, eps_max=0.7) == 0.7
+    assert free.solve_eps(n, r, -1.0, eps_max=0.7) == 0.0
+
+
+def test_solve_eps_matches_linear_model():
+    m = CostModel(c_fixed=2e-4, c_stage1=5e-6, c_stage2=4e-7)
+    n, r = 8_192, 16.0
+    budget = m.predict(n, r, 0.12)
+    assert math.isclose(
+        m.solve_eps(n, r, budget, eps_max=1.0), 0.12, rel_tol=1e-9
+    )
+
+
+def test_should_reexecute_boundary():
+    policy = BudgetPolicy(degrade_floor=0.01)
+    # Strictly below the floor escalates; at the floor approximation stands.
+    assert policy.should_reexecute(0.0099999)
+    assert not policy.should_reexecute(0.01)
+    assert not policy.should_reexecute(0.5)
+    assert policy.should_reexecute(0.0)
+
+
+def test_shard_eps_respects_eps_max():
+    policy = BudgetPolicy(compression_ratio=20.0, eps_max=0.1)
+    m = CostModel(c_fixed=0.0, c_stage1=1e-6, c_stage2=1e-7)
+    eps = policy.shard_eps(m, 10_000, remaining_budget=100.0)
+    assert eps == 0.1
+    assert policy.shard_eps(m, 10_000, remaining_budget=0.0) == 0.0
+
+
+def test_eps_to_budget_is_host_side_int():
+    """Satellite regression: budget must be a plain Python int (static shape)."""
+    b = eps_to_budget(1000, 0.1)
+    assert type(b) is int and b == 100
+    assert eps_to_budget(1000, 0.0) == 0
+    assert eps_to_budget(1000, 0.0001) == 1   # ceil, not floor
+    assert eps_to_budget(0, 0.5) == 0

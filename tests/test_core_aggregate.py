@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container has no hypothesis; deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import aggregate as agg_lib
 from repro.core import correlation as corr_lib

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container has no hypothesis; deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import lsh as lsh_lib
 

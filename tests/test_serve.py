@@ -1,0 +1,379 @@
+"""Tests for the repro.serve subsystem: scheduler packing, aggregate cache,
+deadline degradation, escalation, metrics, and end-to-end answer fidelity."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps.cf import CFServable
+from repro.apps.knn import KNNServable, accurateml_map, majority_vote
+from repro.core import engine as engine_lib
+from repro.core.budget import BudgetPolicy, CostModel
+from repro.core.refine import eps_to_budget
+from repro.serve import (
+    AggregateCache, ContinuousBatcher, DeadlineController, Request, Server,
+)
+from repro.serve.metrics import percentile
+from repro.serve.scheduler import pad_size, slo_class
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+N_KNN, D_KNN, N_CLASSES = 256, 8, 5
+N_CF, I_CF = 96, 24
+
+
+@pytest.fixture(scope="module")
+def knn_servable():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (N_KNN, D_KNN))
+    y = jax.random.randint(jax.random.fold_in(key, 1), (N_KNN,), 0, N_CLASSES)
+    return KNNServable(x, y, n_classes=N_CLASSES, k=3,
+                       lsh_key=jax.random.PRNGKey(7))
+
+
+@pytest.fixture(scope="module")
+def cf_servable():
+    key = jax.random.PRNGKey(2)
+    r = jax.random.uniform(key, (N_CF, I_CF)) * 4 + 1
+    m = (jax.random.uniform(jax.random.fold_in(key, 1), (N_CF, I_CF)) < 0.3
+         ).astype(jnp.float32)
+    return CFServable(r * m, m, lsh_key=jax.random.PRNGKey(8))
+
+
+def _controller(floor=0.004, eps_max=0.32, n_points=N_KNN):
+    """Deterministic controller: 1 second of budget buys 1.0 of eps (before
+    the 0.9 safety factor), stage 1 is free."""
+    policy = BudgetPolicy(
+        compression_ratio=20.0, eps_max=eps_max, degrade_floor=floor
+    )
+    ctl = DeadlineController(policy, ema=0.0)
+    ctl.set_model(
+        "knn", CostModel(c_fixed=0.0, c_stage1=0.0, c_stage2=1.0 / n_points)
+    )
+    return ctl
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def _req(kind, deadline, arrival=0.0, reexec=False):
+    return Request(kind=kind, payload=(), deadline_s=deadline,
+                   arrival_t=arrival, reexecution=reexec)
+
+
+def test_pad_size_quantization():
+    assert pad_size(1) == 1
+    assert pad_size(3) == 4
+    assert pad_size(9) == 16
+    assert pad_size(1000) == 64  # clamped to largest configured size
+
+
+def test_batches_are_kind_homogeneous_and_edf():
+    b = ContinuousBatcher(max_batch=8, slo_aware=False)
+    for i, (kind, dl) in enumerate([
+        ("knn", 5.0), ("cf", 4.0), ("knn", 1.0), ("cf", 2.0), ("knn", 3.0),
+    ]):
+        b.submit(_req(kind, dl))
+    first = b.next_batch(now=0.0)
+    # Head is the most urgent request overall (knn deadline 1.0); its kind
+    # wins the batch, co-passengers in deadline order.
+    assert first.kind == "knn"
+    assert [r.deadline_s for r in first.requests] == [1.0, 3.0, 5.0]
+    second = b.next_batch(now=0.0)
+    assert second.kind == "cf"
+    assert [r.deadline_s for r in second.requests] == [2.0, 4.0]
+    assert b.next_batch(now=0.0) is None
+
+
+def test_packing_respects_max_batch_and_pad():
+    b = ContinuousBatcher(max_batch=3, slo_aware=False)
+    for _ in range(5):
+        b.submit(_req("knn", 1.0))
+    batch = b.next_batch(now=0.0)
+    assert batch.n == 3
+    assert batch.padded_size == 4
+    assert len(b) == 2
+
+
+def test_slo_classes_do_not_mix():
+    b = ContinuousBatcher(max_batch=8)
+    b.submit(_req("knn", 0.010))   # ~2^-6.6 s class
+    b.submit(_req("knn", 1.0))     # class 0
+    b.submit(_req("knn", 0.012))
+    urgent = b.next_batch(now=0.0)
+    assert [r.deadline_s for r in urgent.requests] == [0.010, 0.012]
+    relaxed = b.next_batch(now=0.0)
+    assert [r.deadline_s for r in relaxed.requests] == [1.0]
+    assert slo_class(0.010) != slo_class(1.0)
+
+
+def test_reexecution_never_mixes_with_granted_traffic():
+    b = ContinuousBatcher(max_batch=8, slo_aware=False)
+    b.submit(_req("knn", 1.0))
+    b.submit(_req("knn", 1.0, reexec=True))
+    b.submit(_req("knn", 1.1))
+    first = b.next_batch(now=0.0)
+    assert all(not r.reexecution for r in first.requests)
+    assert first.n == 2
+    second = b.next_batch(now=0.0)
+    assert second.n == 1 and second.requests[0].reexecution
+
+
+# ---------------------------------------------------------------------------
+# aggregate cache
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_miss_and_reuse(knn_servable):
+    cache = AggregateCache(capacity=4)
+    a1, hit1 = cache.get_or_build(knn_servable, 20.0)
+    a2, hit2 = cache.get_or_build(knn_servable, 20.0)
+    assert not hit1 and hit2
+    assert a1 is a2  # the built aggregates object is reused, not rebuilt
+    _, hit3 = cache.get_or_build(knn_servable, 8.0)  # different LSHConfig
+    assert not hit3
+    s = cache.stats()
+    assert s["hits"] == 1 and s["misses"] == 2
+    assert 0 < s["hit_rate"] < 1
+
+
+def test_cache_key_is_permutation_sensitive(knn_servable):
+    """A row-shuffled shard must not alias the cached aggregates of the
+    original (their perm/offsets index the old row order)."""
+    perm = jnp.arange(N_KNN)[::-1]
+    shuffled = KNNServable(
+        knn_servable.train_x[perm], knn_servable.train_y[perm],
+        n_classes=N_CLASSES, k=3, lsh_key=jax.random.PRNGKey(7),
+    )
+    assert shuffled.cache_key(20.0) != knn_servable.cache_key(20.0)
+
+
+def test_cache_key_includes_lsh_key(knn_servable):
+    """Same data, different projection seed -> different cached aggregates."""
+    other = KNNServable(
+        knn_servable.train_x, knn_servable.train_y,
+        n_classes=N_CLASSES, k=3, lsh_key=jax.random.PRNGKey(99),
+    )
+    assert other.cache_key(20.0) != knn_servable.cache_key(20.0)
+
+
+def test_cache_keys_differ_across_servables(knn_servable, cf_servable):
+    assert (("knn", knn_servable.cache_key(20.0))
+            != ("cf", cf_servable.cache_key(20.0)))
+
+
+def test_cache_lru_eviction_and_invalidate(knn_servable):
+    cache = AggregateCache(capacity=2)
+    cache.get_or_build(knn_servable, 32.0)
+    cache.get_or_build(knn_servable, 16.0)
+    cache.get_or_build(knn_servable, 64.0)   # evicts r=32
+    assert cache.evictions == 1 and len(cache) == 2
+    _, hit = cache.get_or_build(knn_servable, 32.0)
+    assert not hit  # was evicted
+    assert cache.invalidate(knn_servable) == 2
+    assert len(cache) == 0
+
+
+# ---------------------------------------------------------------------------
+# deadline controller
+# ---------------------------------------------------------------------------
+
+def test_grant_degrades_eps_with_deadline():
+    ctl = _controller()
+    g_relaxed = ctl.grant("knn", N_KNN, 10.0)
+    g_mid = ctl.grant("knn", N_KNN, 0.1)
+    g_tight = ctl.grant("knn", N_KNN, 0.01)
+    assert g_relaxed.eps == ctl.policy.eps_max
+    assert 0.0 < g_mid.eps < g_relaxed.eps
+    assert g_tight.eps <= g_mid.eps
+    # Budgets are the static-shape counterparts.
+    assert g_relaxed.refine_budget == eps_to_budget(N_KNN, g_relaxed.eps)
+
+
+def test_grant_escalates_below_floor():
+    ctl = _controller(floor=0.01)
+    g = ctl.grant("knn", N_KNN, 0.001)  # solvable eps ~0.0009 < floor
+    assert g.escalate and g.eps == 0.0 and g.refine_budget == 0
+    # Negative remaining budget (deadline already blown) also escalates.
+    g2 = ctl.grant("knn", N_KNN, -1.0)
+    assert g2.escalate
+
+
+def test_grant_escalates_when_snap_lands_below_floor():
+    """A solved eps just above the floor that snaps to 0 must re-execute,
+    not silently skip refinement (escalation is decided post-snap)."""
+    ctl = _controller(floor=0.004)
+    g = ctl.grant("knn", N_KNN, 0.005)  # solvable eps = 0.0045 -> snap 0.0
+    assert g.eps == 0.0 and g.refine_budget == 0
+    assert g.escalate
+
+
+def test_grant_snaps_to_grid():
+    ctl = _controller()
+    g = ctl.grant("knn", N_KNN, 0.1)  # solvable eps = 0.09 -> snap down
+    assert g.eps in ctl.eps_grid
+    assert g.eps <= 0.09
+    assert ctl.snap_eps(0.009) == 0.005
+    assert ctl.snap_eps(1e-9) == 0.0
+
+
+def test_uncalibrated_kind_gets_full_eps():
+    ctl = DeadlineController(BudgetPolicy(eps_max=0.1), ema=0.0)
+    g = ctl.grant("unknown", 1000, 0.5)
+    assert g.eps == 0.1 and not g.escalate
+
+
+def test_deadline_for_inverts_grant():
+    ctl = _controller()
+    for eps in (0.01, 0.08, ctl.policy.eps_max):
+        d = ctl.deadline_for("knn", N_KNN, eps)
+        g = ctl.grant("knn", N_KNN, d * 1.001)
+        assert g.eps >= ctl.snap_eps(eps) - 1e-12, (eps, g.eps)
+
+
+def test_observe_correction_is_clamped():
+    ctl = _controller()
+    ctl.ema = 0.5
+    ctl.observe("knn", predicted_s=0.01, observed_s=10.0)  # 1000x outlier
+    assert ctl.correction("knn") <= 1.0 + 0.5 * 3.0  # ratio clamped at 4
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_percentile():
+    xs = [float(i) for i in range(1, 101)]
+    assert percentile(xs, 50) == pytest.approx(50.5)
+    assert percentile(xs, 99) == pytest.approx(99.01)
+    assert percentile([7.0], 99) == 7.0
+    assert math.isnan(percentile([], 50))
+
+
+# ---------------------------------------------------------------------------
+# engine metering (satellite regression)
+# ---------------------------------------------------------------------------
+
+def test_identity_combine_reports_zero_shuffle():
+    eng = engine_lib.MapReduce(mesh=None)
+    x = jnp.ones((16, 4))
+    eng.run(lambda a: a * 2, engine_lib.CombineSpec(mode="identity"), x)
+    assert eng.last_shuffle_bytes == 0
+    eng.run(lambda a: a * 2, engine_lib.CombineSpec(mode="psum"), x)
+    assert eng.last_shuffle_bytes == 16 * 4 * 4
+
+
+# ---------------------------------------------------------------------------
+# server end-to-end
+# ---------------------------------------------------------------------------
+
+def _server(knn_servable, **ctl_kw):
+    return Server(
+        [knn_servable],
+        controller=_controller(**ctl_kw),
+        batcher=ContinuousBatcher(max_batch=4, pad_sizes=(4,)),
+    )
+
+
+def test_server_deadline_degradation_end_to_end(knn_servable):
+    server = _server(knn_servable)
+    q = knn_servable.train_x[:1]
+
+    relaxed = server.submit("knn", (q[0],), deadline_s=10.0)
+    r_relaxed = server.drain()
+    tight = server.submit("knn", (q[0],), deadline_s=0.05)
+    r_tight = server.drain()
+
+    (relaxed_resp,) = [r for r in r_relaxed if r.rid == relaxed]
+    (tight_resp,) = [r for r in r_tight if r.rid == tight]
+    assert relaxed_resp.eps_granted == server.controller.policy.eps_max
+    assert relaxed_resp.refined is not None
+    # Tight SLO: strictly less refinement, but a stage-1 answer exists.
+    assert tight_resp.eps_granted < relaxed_resp.eps_granted
+    assert tight_resp.stage1 is not None
+    assert 0 <= tight_resp.stage1 < N_CLASSES
+
+
+def test_server_escalation_reexecutes(knn_servable):
+    server = _server(knn_servable, floor=0.01)
+    rid = server.submit("knn", (knn_servable.train_x[0],), deadline_s=1e-4)
+    responses = server.drain()
+    by_path = {r.reexecuted: r for r in responses}
+    first, reexec = by_path[False], by_path[True]
+    assert first.rid == rid and reexec.rid == rid
+    assert first.escalated and first.refined is None
+    assert reexec.refined is not None
+    assert reexec.eps_granted == server.controller.policy.eps_max
+    # Re-execution rows must not double-count in SLO accounting.
+    s = server.summary()
+    assert s["n_requests"] == 1 and s["n_reexecutions"] == 1
+
+
+def test_server_answers_match_direct_computation(knn_servable):
+    """Served answers == running the same two-stage map + reduce by hand."""
+    server = _server(knn_servable)
+    queries = knn_servable.train_x[10:14]
+    rids = [server.submit("knn", (q,), deadline_s=10.0) for q in queries]
+    responses = {r.rid: r for r in server.drain()}
+
+    r = server.controller.policy.compression_ratio
+    eps = server.controller.policy.eps_max
+    agg = knn_servable.build(r)
+    d, l = accurateml_map(
+        knn_servable.train_x, knn_servable.train_y, agg, queries,
+        k=knn_servable.k, refine_budget=eps_to_budget(N_KNN, eps),
+    )
+    expected = np.asarray(majority_vote(d[None][0], l[None][0], N_CLASSES))
+    for i, rid in enumerate(rids):
+        assert responses[rid].eps_granted == eps
+        assert responses[rid].refined == int(expected[i])
+
+
+def test_server_cache_and_metrics(knn_servable):
+    server = _server(knn_servable)
+    for _ in range(2):
+        for i in range(3):
+            server.submit(
+                "knn", (knn_servable.train_x[i],), deadline_s=10.0
+            )
+        server.drain()
+    summary = server.summary()
+    assert summary["n_requests"] == 6
+    assert summary["n_batches"] == 2
+    assert summary["cache"] == {
+        "hits": 1, "misses": 1, "hit_rate": 0.5, "size": 1, "evictions": 0,
+    }
+    assert summary["shuffle_bytes_total"] > 0
+    assert summary["eps_granted"]["max"] == server.controller.policy.eps_max
+    assert 0.0 <= summary["deadline_met_rate"] <= 1.0
+    assert summary["stage1_latency_ms"]["p99"] >= \
+        summary["stage1_latency_ms"]["p50"]
+    assert summary["mean_batch_occupancy"] == 3.0
+
+
+def test_server_heterogeneous_kinds(knn_servable, cf_servable):
+    ctl = _controller()
+    ctl.set_model(
+        "cf", CostModel(c_fixed=0.0, c_stage1=0.0, c_stage2=1.0 / N_CF)
+    )
+    server = Server(
+        [knn_servable, cf_servable],
+        controller=ctl,
+        batcher=ContinuousBatcher(max_batch=4, pad_sizes=(4,)),
+    )
+    server.submit("knn", (knn_servable.train_x[0],), deadline_s=10.0)
+    server.submit(
+        "cf", (cf_servable.ratings[0], cf_servable.mask[0]), deadline_s=10.0
+    )
+    responses = server.drain()
+    kinds = {r.kind for r in responses}
+    assert kinds == {"knn", "cf"}
+    cf_resp = next(r for r in responses if r.kind == "cf")
+    assert cf_resp.answer.shape == (I_CF,)
+    with pytest.raises(KeyError):
+        server.submit("nope", (), deadline_s=1.0)
