@@ -1,39 +1,69 @@
-"""Benchmark driver: one benchmark per paper figure + the roofline table.
+"""Benchmark driver: one benchmark per paper figure + serving/store benches
++ the roofline table.
 
 Prints ``name,us_per_call,derived`` CSV lines (the contract for
-bench_output.txt).  Paper-figure benches run scaled-down live workloads;
-the roofline bench consumes the dry-run artifacts in results/dryrun/.
+bench_output.txt) and finishes with ONE combined ``BENCH`` json line
+aggregating every sub-benchmark's summary, so the perf trajectory is
+machine-readable from a single grep.
+
+Failure contract for CI: the driver exits non-zero when any benchmark
+raises *or* prints a ``BENCH_FAIL`` line (benchmarks use that to flag
+internal guard failures — e.g. a reuse path slower than a rebuild — without
+aborting the rest of the sweep).
 """
 from __future__ import annotations
 
+import io
+import json
 import sys
 import traceback
+
+
+class _FailScanningTee(io.TextIOBase):
+    """Pass-through stream that remembers whether BENCH_FAIL was printed."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.saw_fail = False
+
+    def write(self, s: str) -> int:
+        if "BENCH_FAIL" in s:
+            self.saw_fail = True
+        return self.inner.write(s)
+
+    def flush(self) -> None:
+        self.inner.flush()
 
 
 def main() -> None:
     from benchmarks import (
         fig4_breakdown, fig5_shuffle, fig6_time_reduction, fig7_accuracy,
-        fig8_vs_sampling, fig9_k_sweep, roofline,
+        fig8_vs_sampling, fig9_k_sweep, roofline, serve_latency, store_reuse,
     )
 
+    out = _FailScanningTee(sys.stdout)
+    err = _FailScanningTee(sys.stderr)
+    sys.stdout, sys.stderr = out, err
     ok = True
-    for mod in (fig4_breakdown, fig5_shuffle, fig6_time_reduction,
-                fig7_accuracy, fig8_vs_sampling, fig9_k_sweep):
-        try:
-            mod.run()
-        except Exception:  # keep the harness going, report at the end
-            ok = False
-            print(f"BENCH_FAIL,{mod.__name__}", file=sys.stderr)
-            traceback.print_exc()
-
+    combined: dict = {}
     try:
-        roofline.run()
-    except Exception:
-        ok = False
-        print("BENCH_FAIL,roofline", file=sys.stderr)
-        traceback.print_exc()
+        for mod in (fig4_breakdown, fig5_shuffle, fig6_time_reduction,
+                    fig7_accuracy, fig8_vs_sampling, fig9_k_sweep,
+                    serve_latency, store_reuse, roofline):
+            name = mod.__name__.rsplit(".", 1)[-1]
+            try:
+                summary = mod.run()
+                if isinstance(summary, dict):
+                    combined[name] = summary
+            except Exception:  # keep the harness going, report at the end
+                ok = False
+                print(f"BENCH_FAIL,{name}", file=sys.stderr)
+                traceback.print_exc()
+    finally:
+        sys.stdout, sys.stderr = out.inner, err.inner
 
-    if not ok:
+    print("BENCH " + json.dumps(combined))
+    if not ok or out.saw_fail or err.saw_fail:
         sys.exit(1)
 
 

@@ -8,20 +8,26 @@ distribution, the aggregate-cache hit rate, and total shuffle bytes —
 the accuracy-vs-deadline serving curve's raw material.
 
     PYTHONPATH=src python -m benchmarks.serve_latency
+    REPRO_BENCH_TINY=1 ...   # CI smoke sizes
 """
 from __future__ import annotations
 
 import json
+import os
 
 from benchmarks.common import emit
 from repro.serve.demo import build_demo_server, prepare_demo_server
 
+TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
 BATCH = 4
-WAVES = 4  # waves per SLO class
+WAVES = 1 if TINY else 4  # waves per SLO class
 
 
 def run():
-    server, queries, active, active_mask = build_demo_server(batch=BATCH)
+    sizes = {"knn_points": 2_048, "cf_users": 512} if TINY else {}
+    server, queries, active, active_mask = build_demo_server(
+        batch=BATCH, **sizes
+    )
     # Calibration + prewarm + model-derived SLO classes; compiles and
     # aggregate builds are deploy cost, excluded from the measured state.
     slos = prepare_demo_server(server, batch=BATCH)
@@ -51,8 +57,16 @@ def run():
         f"cache_hit_rate={summary['cache']['hit_rate']:.2f};"
         f"deadline_met_rate={summary['deadline_met_rate']:.2f}",
     )
+    # Steady-state guard: after calibrate+prewarm every measured request
+    # must reuse cached aggregates — a miss here means the cache/store
+    # keying broke (e.g. ratio drift splitting entries).
+    if summary["cache"]["misses"] > 0:
+        print("BENCH_FAIL,serve_latency:cache misses in steady state")
     return summary
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+
+    s = run()
+    sys.exit(1 if s["cache"]["misses"] > 0 else 0)

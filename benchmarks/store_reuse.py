@@ -1,0 +1,149 @@
+"""Aggregate-store reuse benchmark: rebuild vs merge vs restore.
+
+Measures the three ways a serving process can obtain aggregates at a new
+compression ratio (the lifecycle repro.store owns):
+
+  * ``rebuild`` — cold: LSH projection + segment sums + index sort,
+  * ``merge``   — coarsen resident level-0 statistics (cross-ratio reuse),
+  * ``restore`` — adopt a disk snapshot and assemble (warm-start).
+
+Also verifies the exactness contract en route: the merged level must be
+bit-identical to the cold build (it is the same fine segment sums + the
+same single merge).  Emits one ``BENCH`` json line plus the csv contract;
+prints ``BENCH_FAIL`` (and the driver exits non-zero) if merging is not
+measurably faster than rebuilding or exactness breaks.
+
+    PYTHONPATH=src python -m benchmarks.store_reuse
+    REPRO_BENCH_TINY=1 ...   # CI smoke sizes
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.apps.knn import KNNServable
+from repro.data.synthetic import make_mfeat_like
+from repro.store import AggregateStore
+
+TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
+N_POINTS = 4_096 if TINY else 100_000
+N_FEATURES = 32 if TINY else 64
+N_CLASSES = 10
+REPEATS = 3
+RATIO_FINE, RATIO_COARSE = 8.0, 64.0
+
+
+def _make_servable(store=None):
+    x, y = make_mfeat_like(
+        jax.random.PRNGKey(0), n_points=N_POINTS, n_features=N_FEATURES,
+        n_classes=N_CLASSES, modes_per_class=24, mode_scale=0.5,
+    )
+    return KNNServable(
+        x, y, n_classes=N_CLASSES, k=5, lsh_key=jax.random.PRNGKey(7),
+        store=store,
+    )
+
+
+def _timed(fn) -> tuple[float, object]:
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0, out
+
+
+def run():
+    servable = _make_servable()
+
+    # Warm the jit caches once so every timed path pays compute, not XLA
+    # compilation (a deploy cost all three paths share).
+    warm = _make_servable()
+    warm.store.get(warm, RATIO_FINE)
+    warm.store.get(warm, RATIO_COARSE)
+
+    # ---- rebuild: cold store each repeat ----
+    rebuild_ts, built = [], None
+    for _ in range(REPEATS):
+        servable.store = AggregateStore()
+        dt, (built, source) = _timed(
+            lambda: servable.store.get(servable, RATIO_COARSE)
+        )
+        assert source == "built", source
+        rebuild_ts.append(dt)
+    t_rebuild = sorted(rebuild_ts)[REPEATS // 2]
+
+    # ---- merge: resident level-0, re-derive the coarse level ----
+    servable.store = AggregateStore()
+    servable.store.get(servable, RATIO_FINE)      # pin a finer level
+    merge_ts, merged = [], None
+    for _ in range(REPEATS):
+        servable.store.drop_assembled(servable, None)
+        servable.store.get(servable, RATIO_FINE)  # keep the fine level hot
+        dt, (merged, source) = _timed(
+            lambda: servable.store.get(servable, RATIO_COARSE)
+        )
+        assert source == "merged", source
+        merge_ts.append(dt)
+    t_merge = sorted(merge_ts)[REPEATS // 2]
+
+    # ---- restore: snapshot on disk -> fresh store -> assemble ----
+    snap = tempfile.mkdtemp(prefix="store_reuse_")
+    try:
+        servable.store.save(os.path.join(snap, "agg"))
+        restore_ts, restored = [], None
+        for _ in range(REPEATS):
+            fresh = AggregateStore()
+            t0 = time.perf_counter()
+            n = fresh.restore(os.path.join(snap, "agg"), [servable])
+            prepared, source = fresh.get(servable, RATIO_COARSE)
+            jax.block_until_ready(prepared)
+            restore_ts.append(time.perf_counter() - t0)
+            assert n == 1 and source == "restored", (n, source)
+            restored = prepared
+        t_restore = sorted(restore_ts)[REPEATS // 2]
+    finally:
+        shutil.rmtree(snap, ignore_errors=True)
+
+    # ---- exactness contract ----
+    exact = all(
+        np.array_equal(np.asarray(getattr(built.agg, f)),
+                       np.asarray(getattr(other.agg, f)))
+        for other in (merged, restored)
+        for f in ("means", "counts", "perm", "offsets")
+    )
+
+    summary = {
+        "n_points": N_POINTS,
+        "ratio_fine": RATIO_FINE,
+        "ratio_coarse": RATIO_COARSE,
+        "rebuild_ms": t_rebuild * 1e3,
+        "merge_ms": t_merge * 1e3,
+        "restore_ms": t_restore * 1e3,
+        "merge_speedup": t_rebuild / max(t_merge, 1e-9),
+        "restore_speedup": t_rebuild / max(t_restore, 1e-9),
+        "exact": exact,
+    }
+    print("BENCH " + json.dumps({"store_reuse": summary}))
+    emit(
+        "store_reuse_merge", t_merge * 1e6,
+        f"rebuild_us={t_rebuild * 1e6:.1f};restore_us={t_restore * 1e6:.1f};"
+        f"merge_speedup={summary['merge_speedup']:.1f}x",
+    )
+    if not exact:
+        print("BENCH_FAIL,store_reuse:coarsened level not bit-identical")
+    if t_merge >= t_rebuild:
+        print("BENCH_FAIL,store_reuse:merge not faster than rebuild")
+    return summary
+
+
+if __name__ == "__main__":
+    import sys
+
+    s = run()
+    sys.exit(0 if s["exact"] and s["merge_speedup"] > 1.0 else 1)

@@ -136,6 +136,44 @@ def build_cf_aggregates(
     return _build_cf_aggregates(ratings, mask, ids, params.config.n_buckets)
 
 
+@partial(jax.jit, static_argnames=("n_buckets",))
+def cf_mergeable_stats(
+    ratings: jax.Array, mask: jax.Array, fine_ids: jax.Array, n_buckets: int
+) -> dict[str, jax.Array]:
+    """Additive per-bucket statistics for the aggregate store.
+
+    ``sr`` (raw rating sums), ``s`` (centred sums), ``c`` (rater counts) and
+    the user counts are all additive under bucket union, so a coarser
+    pyramid level's centroid profile (sr/c) and surrogate terms re-derive
+    exactly from merged statistics.
+    """
+    centred = (ratings - user_means(ratings, mask)) * mask
+    ones = jnp.ones((ratings.shape[0],), jnp.int32)
+    return {
+        "counts": jax.ops.segment_sum(ones, fine_ids, num_segments=n_buckets),
+        "sr": jax.ops.segment_sum(
+            ratings * mask, fine_ids, num_segments=n_buckets
+        ),
+        "s": jax.ops.segment_sum(centred, fine_ids, num_segments=n_buckets),
+        "c": jax.ops.segment_sum(mask, fine_ids, num_segments=n_buckets),
+    }
+
+
+@jax.jit
+def cf_assemble(stats: dict, index: agg_lib.BucketIndex) -> CFAggregates:
+    """Statistics + index -> the prepared aggregates ``accurateml_map`` uses."""
+    c = stats["c"]
+    profile = stats["sr"] / jnp.maximum(c, 1.0)
+    agg = agg_lib.AggregatedData(
+        means=profile, counts=stats["counts"], perm=index.perm,
+        offsets=index.offsets, bucket_of=index.bucket_of,
+    )
+    return CFAggregates(
+        agg=agg, profile=profile, profile_mask=(c > 0).astype(profile.dtype),
+        s=stats["s"], c=c,
+    )
+
+
 @partial(jax.jit, static_argnames=("refine_budget",))
 def accurateml_map(
     ratings, mask, cf_agg: CFAggregates, active, active_mask,
@@ -309,17 +347,26 @@ class CFServable(serve_servable.LSHServableBase):
         n_hashes: int = 4,
         bucket_width: float = 8.0,
         engine: engine_lib.MapReduce | None = None,
+        store=None,
+        pyramid_spec=None,
     ):
         super().__init__(
             (ratings, mask), lsh_key=lsh_key, n_hashes=n_hashes,
-            bucket_width=bucket_width, engine=engine,
+            bucket_width=bucket_width, engine=engine, store=store,
+            pyramid_spec=pyramid_spec,
         )
         self.ratings = ratings
         self.mask = mask
 
-    def build(self, compression_ratio: float) -> CFAggregates:
-        params = self._lsh_params(compression_ratio, self.ratings.shape[1])
-        return build_cf_aggregates(self.ratings, self.mask, params)
+    # --- repro.store pyramid hooks ---
+    def hash_features(self) -> jax.Array:
+        return (self.ratings - user_means(self.ratings, self.mask)) * self.mask
+
+    def mergeable_stats(self, fine_ids, n_buckets):
+        return cf_mergeable_stats(self.ratings, self.mask, fine_ids, n_buckets)
+
+    def assemble(self, stats, index) -> CFAggregates:
+        return cf_assemble(stats, index)
 
     def probe_payload(self) -> tuple:
         return (self.ratings[0], self.mask[0])

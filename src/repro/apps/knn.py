@@ -126,6 +126,45 @@ def build_knn_aggregates(
     return KNNAggregates(agg=agg, bucket_labels=bucket_labels)
 
 
+@partial(jax.jit, static_argnames=("n_buckets", "n_classes"))
+def knn_mergeable_stats(
+    train_x: jax.Array, train_y: jax.Array, fine_ids: jax.Array,
+    n_buckets: int, n_classes: int,
+) -> dict[str, jax.Array]:
+    """Additive per-bucket sufficient statistics for the aggregate store.
+
+    Feature sums, point counts, and the label histogram are all additive
+    under bucket union, so every coarser pyramid level merges exactly
+    (weighted means and majority labels re-derive from the merged stats).
+    """
+    ones = jnp.ones((train_x.shape[0],), dtype=jnp.int32)
+    return {
+        "counts": jax.ops.segment_sum(ones, fine_ids, num_segments=n_buckets),
+        "sums": jax.ops.segment_sum(
+            train_x.astype(jnp.float32), fine_ids, num_segments=n_buckets
+        ),
+        "label_hist": jax.ops.segment_sum(
+            jax.nn.one_hot(train_y, n_classes), fine_ids,
+            num_segments=n_buckets,
+        ),
+    }
+
+
+@jax.jit
+def knn_assemble(stats: dict, index: agg_lib.BucketIndex) -> KNNAggregates:
+    """Statistics + index -> the prepared aggregates ``accurateml_map`` uses."""
+    counts = stats["counts"]
+    means = stats["sums"] / jnp.maximum(
+        counts[:, None].astype(jnp.float32), 1.0
+    )
+    agg = agg_lib.AggregatedData(
+        means=means, counts=counts, perm=index.perm, offsets=index.offsets,
+        bucket_of=index.bucket_of,
+    )
+    labels = jnp.argmax(stats["label_hist"], axis=-1).astype(jnp.int32)
+    return KNNAggregates(agg=agg, bucket_labels=labels)
+
+
 @partial(jax.jit, static_argnames=("k", "refine_budget"))
 def accurateml_map(
     train_x: jax.Array,
@@ -289,20 +328,34 @@ class KNNServable(serve_servable.LSHServableBase):
         n_hashes: int = 4,
         bucket_width: float = 4.0,
         engine: engine_lib.MapReduce | None = None,
+        store=None,
+        pyramid_spec=None,
     ):
         super().__init__(
             (train_x, train_y), lsh_key=lsh_key, n_hashes=n_hashes,
-            bucket_width=bucket_width, engine=engine,
+            bucket_width=bucket_width, engine=engine, store=store,
+            pyramid_spec=pyramid_spec,
         )
         self.train_x = train_x
         self.train_y = train_y
         self.n_classes = n_classes
         self.k = k
 
-    def build(self, compression_ratio: float) -> KNNAggregates:
-        params = self._lsh_params(compression_ratio, self.train_x.shape[1])
-        return build_knn_aggregates(
-            self.train_x, self.train_y, params, self.n_classes
+    # --- repro.store pyramid hooks ---
+    def hash_features(self) -> jax.Array:
+        return self.train_x
+
+    def mergeable_stats(self, fine_ids, n_buckets):
+        return knn_mergeable_stats(
+            self.train_x, self.train_y, fine_ids, n_buckets, self.n_classes
+        )
+
+    def assemble(self, stats, index) -> KNNAggregates:
+        prepared = knn_assemble(stats, index)
+        means = prepared.agg.means.astype(self.train_x.dtype)
+        return KNNAggregates(
+            agg=dataclasses.replace(prepared.agg, means=means),
+            bucket_labels=prepared.bucket_labels,
         )
 
     def probe_payload(self) -> tuple:

@@ -1,10 +1,11 @@
 """AccurateML core: LSH aggregation + two-stage correlation-guided refinement."""
 from repro.core.lsh import (  # noqa: F401
-    LSHConfig, LSHParams, init_lsh, bucket_ids, raw_hashes,
-    config_for_compression,
+    LSHConfig, LSHParams, init_lsh, bucket_ids, fine_bucket_ids, raw_hashes,
+    config_for_compression, nested_config,
 )
 from repro.core.aggregate import (  # noqa: F401
-    AggregatedData, build_aggregates, aggregate_by_bucket,
+    AggregatedData, BucketIndex, build_aggregates, aggregate_by_bucket,
+    aggregate_nested, bucket_index, coarsen_index, merge_levels,
     refinement_indices, buckets_fully_covered,
 )
 from repro.core.correlation import (  # noqa: F401

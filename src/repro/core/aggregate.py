@@ -94,9 +94,132 @@ def aggregate_by_bucket(
 def build_aggregates(
     data: jax.Array, params: lsh_lib.LSHParams
 ) -> AggregatedData:
-    """LSH-group then aggregate: the full §III-B generation step."""
-    ids = lsh_lib.bucket_ids(data, params)
-    return aggregate_by_bucket(data, ids, params.config.n_buckets)
+    """LSH-group then aggregate: the full §III-B generation step.
+
+    Nested configs (``base_buckets`` set) aggregate hierarchically: segment
+    sums at the finest resolution first, then an exact ``merge_levels`` down
+    to ``n_buckets``.  That makes a direct build of any supported level
+    arithmetically identical to coarsening a cached finer level — the
+    contract the aggregate store's cross-ratio reuse relies on.
+    """
+    cfg = params.config
+    fine_ids = lsh_lib.fine_bucket_ids(data, params)
+    if cfg.base_buckets is None or cfg.base_buckets == cfg.n_buckets:
+        return aggregate_by_bucket(data, fine_ids, cfg.n_buckets)
+    return aggregate_nested(data, fine_ids, cfg.base_buckets, cfg.n_buckets)
+
+
+# ---------------------------------------------------------------------------
+# mergeable sufficient statistics (multi-resolution pyramid support)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BucketIndex:
+    """The paper's §III-B "index file" detached from the statistics: the
+    permutation/offsets machinery linking buckets to original points.  Kept
+    separate so the aggregate store can coarsen it in O(K) while the
+    statistics merge in O(K·D)."""
+
+    perm: jax.Array       # [N]   original index sorted by fine bucket id
+    offsets: jax.Array    # [K+1] bucket start offsets into perm
+    bucket_of: jax.Array  # [N]   bucket id of each original point
+
+    @property
+    def n_buckets(self) -> int:
+        return self.offsets.shape[0] - 1
+
+    def tree_flatten(self):
+        return (self.perm, self.offsets, self.bucket_of), None
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+
+@partial(jax.jit, static_argnames=("n_buckets",))
+def bucket_index(
+    ids: jax.Array, n_buckets: int, counts: jax.Array | None = None
+) -> BucketIndex:
+    """Build the perm/offsets index for per-point bucket ids.
+
+    ``counts`` (points per bucket) may be passed when the caller already
+    segment-summed them — e.g. the store's base build, whose mergeable
+    statistics include counts — to skip the redundant O(N) pass.
+    """
+    if counts is None:
+        counts = jax.ops.segment_sum(
+            jnp.ones_like(ids, dtype=jnp.int32), ids, num_segments=n_buckets
+        )
+    perm = jnp.argsort(ids, stable=True).astype(jnp.int32)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)]
+    )
+    return BucketIndex(perm=perm, offsets=offsets, bucket_of=ids)
+
+
+@partial(jax.jit, static_argnames=("factor",))
+def merge_levels(stat: jax.Array, factor: int) -> jax.Array:
+    """Merge an additive per-bucket statistic to a coarser nested level.
+
+    ``stat`` is [K, ...] with nested ids (coarse id = fine id // factor), so
+    each coarse bucket is the sum of ``factor`` *consecutive* fine buckets:
+    a reshape + axis sum, no gather.  Exact for counts (int) and the segment
+    sums the store merges (weighted means follow as merged_sum / merged_count).
+    """
+    k = stat.shape[0]
+    if k % factor:
+        raise ValueError(f"cannot merge {k} buckets by factor {factor}")
+    return stat.reshape((k // factor, factor) + stat.shape[1:]).sum(axis=1)
+
+
+def coarsen_index(index: BucketIndex, factor: int) -> BucketIndex:
+    """Re-map a fine ``BucketIndex`` to a coarser nested level in O(K).
+
+    The perm is *unchanged*: sorting by fine id already groups coarse
+    buckets contiguously (coarse = fine // factor is monotone in fine), and
+    coarse offsets are every ``factor``-th fine offset.
+    """
+    if index.n_buckets % factor:
+        raise ValueError(
+            f"cannot coarsen {index.n_buckets} buckets by factor {factor}"
+        )
+    return BucketIndex(
+        perm=index.perm,
+        offsets=index.offsets[::factor],
+        bucket_of=index.bucket_of // jnp.int32(factor),
+    )
+
+
+@partial(jax.jit, static_argnames=("base_buckets", "n_buckets"))
+def aggregate_nested(
+    data: jax.Array, fine_ids: jax.Array, base_buckets: int, n_buckets: int
+) -> AggregatedData:
+    """Hierarchical §III-B generation: segment to the finest level, merge down.
+
+    Bit-compatible with the aggregate store's coarsen path by construction
+    (same fine segment sums, same single merge), which is what makes
+    cross-compression-ratio reuse safe to serve.
+    """
+    n = data.shape[0]
+    ones = jnp.ones((n,), dtype=jnp.int32)
+    counts_f = jax.ops.segment_sum(ones, fine_ids, num_segments=base_buckets)
+    sums_f = jax.ops.segment_sum(
+        data.astype(jnp.float32), fine_ids, num_segments=base_buckets
+    )
+    factor = base_buckets // n_buckets
+    counts = merge_levels(counts_f, factor)
+    sums = merge_levels(sums_f, factor)
+    means = sums / jnp.maximum(counts[:, None].astype(jnp.float32), 1.0)
+
+    index = coarsen_index(bucket_index(fine_ids, base_buckets), factor)
+    return AggregatedData(
+        means=means.astype(data.dtype),
+        counts=counts,
+        perm=index.perm,
+        offsets=index.offsets,
+        bucket_of=index.bucket_of,
+    )
 
 
 @partial(jax.jit, static_argnames=("budget",))

@@ -38,11 +38,32 @@ class LSHConfig:
       n_buckets: the bounded bucket-id space ``K``.  The paper "selects a
         bucket number to decide the compression ratio"; we expose it directly:
         K ~= N / compression_ratio.
+      base_buckets: when set, bucket ids are *nested*: the signature first
+        maps into ``base_buckets`` fine ids and the served id is the fine id
+        divided by ``base_buckets // n_buckets``.  Every coarse bucket is
+        then an exact union of a contiguous run of fine buckets, so the
+        aggregate store (repro.store) can derive this level by *merging* a
+        finer level's sufficient statistics instead of rebuilding.  ``None``
+        keeps the flat ``sig % n_buckets`` scheme.
     """
 
     n_hashes: int = 4
     bucket_width: float = 4.0
     n_buckets: int = 256
+    base_buckets: int | None = None
+
+    def __post_init__(self):
+        if self.base_buckets is not None:
+            if self.base_buckets < self.n_buckets:
+                raise ValueError(
+                    f"base_buckets={self.base_buckets} < "
+                    f"n_buckets={self.n_buckets}"
+                )
+            if self.base_buckets % self.n_buckets:
+                raise ValueError(
+                    "nested ids need n_buckets to divide base_buckets "
+                    f"(got {self.n_buckets} / {self.base_buckets})"
+                )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,15 +110,41 @@ def bucket_ids(data: jax.Array, params: LSHParams) -> jax.Array:
 
     Points with identical hash signatures always land in the same bucket
     (locality preserved); the modular signature only *merges* buckets, which
-    is the paper's own mechanism for controlling bucket count.
+    is the paper's own mechanism for controlling bucket count.  With a
+    nested config (``base_buckets`` set) the id is derived from the fine id
+    by integer division, so coarse buckets are unions of fine ones.
     """
+    cfg = params.config
+    fine = fine_bucket_ids(data, params)
+    if cfg.base_buckets is None or cfg.base_buckets == cfg.n_buckets:
+        return fine
+    return fine // jnp.int32(cfg.base_buckets // cfg.n_buckets)
+
+
+def fine_bucket_ids(data: jax.Array, params: LSHParams) -> jax.Array:
+    """Finest-resolution bucket ids: ``sig % base_buckets`` (or ``n_buckets``
+    for flat configs).  This is the level-0 id space of the aggregate store's
+    multi-resolution pyramid; every supported coarser id equals
+    ``fine_id // factor``."""
     h = raw_hashes(data, params)  # [N, H]
     cfg = params.config
     primes = jnp.asarray(
         _SIGNATURE_PRIMES[: cfg.n_hashes], dtype=jnp.uint32
     )
     sig = jnp.sum(h.astype(jnp.uint32) * primes[None, :], axis=-1)
-    return (sig % jnp.uint32(cfg.n_buckets)).astype(jnp.int32)
+    base = cfg.base_buckets or cfg.n_buckets
+    return (sig % jnp.uint32(base)).astype(jnp.int32)
+
+
+def nested_config(
+    base_buckets: int, n_buckets: int, *, n_hashes: int = 4,
+    bucket_width: float = 4.0,
+) -> LSHConfig:
+    """An ``LSHConfig`` whose ids live in the nested/prefix id space."""
+    return LSHConfig(
+        n_hashes=n_hashes, bucket_width=bucket_width, n_buckets=n_buckets,
+        base_buckets=base_buckets,
+    )
 
 
 @partial(jax.jit, static_argnames=("config", "n_features"))

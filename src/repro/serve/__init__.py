@@ -26,7 +26,11 @@ Life of a request::
         |                  relaxed-deadline full-eps re-execution
         v
     [ AggregateCache ]     repro.serve.cache — stage-1 aggregates built once
-        |                  per (dataset shard, LSHConfig), LRU + hit metering
+        |                  per (dataset shard, LSHConfig), LRU + hit metering;
+        |                  misses delegate to repro.store.AggregateStore:
+        |                  new compression ratios merge the shard's resident
+        |                  pyramid level (coarsened_hits) and snapshots
+        |                  warm-start restarted servers (restored_hits)
         v
     [ Servable.run ]       the workload's two-stage map + combine on the
         |                  MapReduce engine (shuffle bytes metered); stage 1

@@ -21,6 +21,7 @@ from repro.data.synthetic import make_mfeat_like, make_netflix_like
 from repro.serve.deadline import DeadlineController
 from repro.serve.scheduler import ContinuousBatcher
 from repro.serve.server import Server
+from repro.store import AggregateStore
 
 KNN_D, CF_ITEMS, N_CLASSES = 48, 384, 10
 
@@ -31,20 +32,24 @@ def build_demo_server(
     """Server over synthetic kNN + CF shards; returns (server, queries,
     active, active_mask)."""
     key = jax.random.PRNGKey(0)
+    # One aggregate store shared by both shards: pyramids, cross-ratio
+    # merges, and snapshot/warm-start all live in one place.
+    store = AggregateStore()
     x, y = make_mfeat_like(
         key, n_points=knn_points + 64, n_features=KNN_D,
         n_classes=N_CLASSES, modes_per_class=24, mode_scale=0.5,
     )
     knn = KNNServable(
         x[64:], y[64:], n_classes=N_CLASSES, k=5,
-        lsh_key=jax.random.PRNGKey(7),
+        lsh_key=jax.random.PRNGKey(7), store=store,
     )
     ratings, mask = make_netflix_like(
         jax.random.fold_in(key, 1), n_users=cf_users, n_items=CF_ITEMS,
         density=0.12,
     )
     cf = CFServable(
-        ratings[8:] * mask[8:], mask[8:], lsh_key=jax.random.PRNGKey(8)
+        ratings[8:] * mask[8:], mask[8:], lsh_key=jax.random.PRNGKey(8),
+        store=store,
     )
     policy = BudgetPolicy(
         compression_ratio=20.0, eps_max=0.32, degrade_floor=0.004

@@ -49,7 +49,10 @@ class ServeMetrics:
         self.occupancy_total = 0
 
     # ------------------------------------------------------------------
-    def summary(self, cache_stats: dict | None = None) -> dict:
+    def summary(
+        self, cache_stats: dict | None = None,
+        store_stats: list[dict] | None = None,
+    ) -> dict:
         rs = self.responses
         # Re-execution rows carry a server-invented relaxed deadline; they
         # are real work (latency, eps, shuffle) but must not count toward
@@ -96,4 +99,14 @@ class ServeMetrics:
         }
         if cache_stats is not None:
             out["cache"] = dict(cache_stats)
+            misses = cache_stats.get("misses", 0)
+            coarsened = cache_stats.get("coarsened_hits")
+            if coarsened is not None:
+                # Fraction of cache misses absorbed by cross-ratio merges
+                # (repro.store pyramid reuse) instead of cold rebuilds.
+                out["cache"]["coarsened_hit_rate"] = (
+                    coarsened / misses if misses else 0.0
+                )
+        if store_stats is not None:
+            out["store"] = list(store_stats)
         return out

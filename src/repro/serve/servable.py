@@ -7,14 +7,25 @@ and a cache key of (dataset fingerprint, LSHConfig).  The cache key is a
 correctness contract — two servables with different data or hyper-params
 must never alias — so it lives here, in one place, rather than hand-synced
 per workload.
+
+Aggregates are owned by an ``repro.store.AggregateStore``: compression
+ratios quantize to the servable's ``PyramidSpec`` resolution grid (cache
+keys carry the realized bucket count, never a raw float, so float drift in
+a requested ratio can't cause silent misses), ``build`` goes through the
+store's pyramid (finest level once, coarser levels by exact merge), and
+subclasses implement the ``MergeableServable`` hooks ``hash_features`` /
+``mergeable_stats`` / ``assemble``.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import aggregate as agg_lib
 from repro.core import engine as engine_lib
 from repro.core import lsh as lsh_lib
+from repro.store.pyramid import PyramidSpec
+from repro.store.store import AggregateStore
 
 
 def _checksum(a: jax.Array) -> float:
@@ -42,6 +53,8 @@ class LSHServableBase:
         n_hashes: int,
         bucket_width: float,
         engine: engine_lib.MapReduce | None = None,
+        store: AggregateStore | None = None,
+        pyramid_spec: PyramidSpec | None = None,
     ):
         self.lsh_key = lsh_key
         # Hashable form of the PRNG key: different projection seeds over
@@ -64,15 +77,25 @@ class LSHServableBase:
         self._fingerprint = tuple(
             (a.shape, str(a.dtype), _checksum(a)) for a in data_arrays
         )
+        self.pyramid_spec = pyramid_spec or PyramidSpec.for_points(
+            self.n_points
+        )
+        # The store owns aggregate lifecycle (pyramid reuse, persistence);
+        # a private store per servable unless one is shared across shards.
+        # (Explicit None check: an empty AggregateStore is len() == 0.)
+        self.store = store if store is not None else AggregateStore()
 
     @property
     def last_shuffle_bytes(self) -> int:
         return self.engine.last_shuffle_bytes
 
     def _lsh_config(self, compression_ratio: float) -> lsh_lib.LSHConfig:
-        return lsh_lib.config_for_compression(
-            self.n_points, compression_ratio, n_hashes=self.n_hashes,
-            bucket_width=self.bucket_width,
+        """Nested config at the pyramid level nearest the requested ratio."""
+        spec = self.pyramid_spec
+        level = spec.level_for_ratio(compression_ratio)
+        return lsh_lib.nested_config(
+            spec.base_buckets, spec.n_buckets(level),
+            n_hashes=self.n_hashes, bucket_width=self.bucket_width,
         )
 
     def _lsh_params(self, compression_ratio: float, n_features: int):
@@ -80,12 +103,61 @@ class LSHServableBase:
             self.lsh_key, n_features, self._lsh_config(compression_ratio)
         )
 
+    def quantized_ratio(self, compression_ratio: float) -> float:
+        """The realized pyramid-grid ratio a request actually gets."""
+        return self.pyramid_spec.quantize_ratio(compression_ratio)
+
     def cache_key(self, compression_ratio: float):
+        """(shard, LSH family, realized resolution) — all-integer resolution
+        terms, so float drift in the requested ratio can't split entries."""
         cfg = self._lsh_config(compression_ratio)
         return (
             self._fingerprint, self._lsh_key_data,
-            cfg.n_hashes, cfg.bucket_width, cfg.n_buckets,
+            cfg.n_hashes, cfg.bucket_width, cfg.base_buckets, cfg.n_buckets,
         )
+
+    def store_key(self):
+        """Pyramid identity: one pyramid serves every resolution level."""
+        spec = self.pyramid_spec
+        return (
+            self._fingerprint, self._lsh_key_data,
+            self.n_hashes, self.bucket_width,
+            spec.base_buckets, spec.branch, spec.n_levels,
+        )
+
+    # ------------------------------------------------------------------
+    # MergeableServable hooks (repro.store pyramid protocol)
+    # ------------------------------------------------------------------
+    def hash_features(self) -> jax.Array:
+        """[N, F] rows the LSH family hashes (workload-specific)."""
+        raise NotImplementedError
+
+    def mergeable_stats(
+        self, fine_ids: jax.Array, n_buckets: int
+    ) -> dict[str, jax.Array]:
+        """Additive per-bucket statistics (must include 'counts')."""
+        raise NotImplementedError
+
+    def assemble(self, stats: dict, index: agg_lib.BucketIndex):
+        """Statistics + index -> the prepared object ``run`` consumes."""
+        raise NotImplementedError
+
+    def fine_ids(self, base_buckets: int) -> jax.Array:
+        """Level-0 (finest) bucket ids of the shard's hash features."""
+        feats = self.hash_features()
+        params = lsh_lib.init_lsh(
+            self.lsh_key, feats.shape[1],
+            lsh_lib.LSHConfig(
+                n_hashes=self.n_hashes, bucket_width=self.bucket_width,
+                n_buckets=base_buckets,
+            ),
+        )
+        return lsh_lib.fine_bucket_ids(feats, params)
+
+    def build(self, compression_ratio: float):
+        """Prepared aggregates at the quantized ratio, via the store (the
+        finest level is built once; coarser ratios merge, never rebuild)."""
+        return self.store.get(self, compression_ratio)[0]
 
     @staticmethod
     def stack_pad(payloads, batch: int) -> tuple:

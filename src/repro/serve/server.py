@@ -21,6 +21,7 @@ paper's re-execute-instead-of-approximate straggler rule.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Any, Callable, Iterable
 
@@ -276,10 +277,80 @@ class Server:
         )
 
     # ------------------------------------------------------------------
+    # aggregate persistence (repro.store warm-start)
+    # ------------------------------------------------------------------
+    def _stores(self) -> list:
+        stores: dict[int, Any] = {}
+        for s in self.servables.values():
+            store = getattr(s, "store", None)
+            if store is not None:
+                stores[id(store)] = store
+        return list(stores.values())
+
+    def save_aggregates(self, directory) -> int:
+        """Snapshot every servable's built aggregate pyramids to disk so a
+        restarted server can warm-start; returns pyramids written.
+
+        Multiple distinct stores (servables not sharing one) are namespaced
+        under ``store<i>/`` subdirectories.
+        """
+        stores = self._stores()
+        if len(stores) == 1:
+            return stores[0].save(directory)
+        return sum(
+            store.save(os.path.join(str(directory), f"store{i}"))
+            for i, store in enumerate(stores)
+        )
+
+    def warm_start(
+        self, directory, *, ratios: Iterable[float] | None = None
+    ) -> dict:
+        """Restore aggregate snapshots and pre-populate the cache.
+
+        Probes both snapshot layouts (flat, and the ``store<i>/`` subdirs a
+        multi-store server writes) against every servable, so the restoring
+        server's store-sharing topology need not match the saver's —
+        snapshots adopt by identity, never by position.  After this, the
+        first request at a warmed compression ratio (by default the
+        policy's) is a cache *hit*.
+
+        Returns ``{"restored": pyramids adopted, "warmed": cache entries}``.
+        ``restored == 0`` with ``warmed > 0`` means the snapshot did NOT
+        match (stale fingerprint, different LSH key, ...) and the warm
+        entries were *cold-built* — the caller paid full generation cost
+        and should re-snapshot.
+        """
+        candidates = [str(directory)]
+        if os.path.isdir(str(directory)):
+            candidates += sorted(
+                e.path for e in os.scandir(str(directory))
+                if e.is_dir() and e.name.startswith("store")
+            )
+        servables = list(self.servables.values())
+        restored = 0
+        for servable in servables:
+            store = getattr(servable, "store", None)
+            if store is None:
+                continue
+            for candidate in candidates:
+                n = store.restore(candidate, [servable])
+                if n:
+                    restored += n
+                    break
+        if ratios is None:
+            ratios = [self.controller.policy.compression_ratio]
+        warmed = self.cache.warm_from_store(servables, ratios)
+        return {"restored": restored, "warmed": warmed}
+
+    # ------------------------------------------------------------------
     def reset_metrics(self) -> None:
         """Zero request/batch/cache meters (after a warmup phase)."""
         self.metrics.reset()
         self.cache.reset_stats()
 
     def summary(self) -> dict:
-        return self.metrics.summary(cache_stats=self.cache.stats())
+        store_stats = [s.stats() for s in self._stores()]
+        return self.metrics.summary(
+            cache_stats=self.cache.stats(),
+            store_stats=store_stats or None,
+        )

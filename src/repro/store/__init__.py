@@ -1,0 +1,50 @@
+"""repro.store — tiered, mergeable, persistent aggregate store.
+
+AccurateML's expensive step is aggregate *generation* (§III-B: LSH grouping
++ per-bucket information aggregation + the on-disk "index file" that links
+aggregated points back to their originals).  The offline pipeline pays it
+once per job; a server must not pay it once per (shard, compression ratio,
+process).  This package owns the lifecycle of aggregates along all three
+axes:
+
+  resolutions  ``Pyramid`` builds the finest level once (nested LSH ids)
+               and derives every coarser compression ratio by *merging*
+               sufficient statistics — weighted means + counts merge
+               exactly; perm/offsets coarsen in O(K) (mergeable-summary
+               design à la hierarchical MapReduce histograms).
+
+  time         ``StreamingAggregate`` delta-updates level-0 statistics in
+               fixed shapes on ``append(batch)``; a staleness counter
+               schedules the index re-sort (EARL-style incremental
+               early-result state).
+
+  processes    ``persist``/``AggregateStore.save``/``restore`` snapshot
+               level-0 state (npz + identity manifest) so restarted servers
+               warm-start their aggregate caches.
+
+``AggregateStore`` is the front-end: ``get(servable, ratio)`` quantizes the
+ratio to the resolution grid (keys are realized bucket counts, immune to
+float drift) and reports whether the answer was resident, merged, built, or
+restored — ``repro.serve.AggregateCache`` meters those sources.
+"""
+from repro.store.ingest import StreamingAggregate
+from repro.store.persist import restore_store, save_store
+from repro.store.pyramid import (
+    SOURCE_BUILT, SOURCE_MEMORY, SOURCE_MERGED, SOURCE_RESTORED,
+    MergeableServable, Pyramid, PyramidSpec,
+)
+from repro.store.store import AggregateStore
+
+__all__ = [
+    "AggregateStore",
+    "MergeableServable",
+    "Pyramid",
+    "PyramidSpec",
+    "SOURCE_BUILT",
+    "SOURCE_MEMORY",
+    "SOURCE_MERGED",
+    "SOURCE_RESTORED",
+    "StreamingAggregate",
+    "restore_store",
+    "save_store",
+]

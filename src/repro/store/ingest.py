@@ -1,0 +1,254 @@
+"""Streaming ingest: fixed-shape delta updates of level-0 aggregates.
+
+The north-star workload (millions of users writing online) cannot afford a
+full LSH + segment-sum rebuild per write.  ``StreamingAggregate`` keeps one
+shard's level-0 sufficient statistics *live* under appends:
+
+  * ``append(batch)`` hashes the new rows, scatter-adds their contribution
+    into the per-bucket sums/counts (and any extra additive statistics),
+    and writes the rows into a preallocated buffer — every array keeps its
+    shape, so the jitted ingest kernel compiles once per chunk size;
+  * the perm/offsets *index* (the paper's §III-B index file) is only needed
+    by stage-2 refinement, so it is rebuilt lazily: a staleness counter
+    tracks how many points the index lags and ``needs_rebucket`` schedules
+    the O(N log N) re-sort (EARL-style incremental maintenance of
+    early-result state: keep the cheap statistics exact, amortize the
+    expensive index).
+
+Consistency contract: ``live_stats()`` is exact after every append;
+``level0()`` returns the last *rebucketed* snapshot (statistics and index
+from the same instant), ready for ``Pyramid.adopt_level0`` /
+``AggregateStore.adopt``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregate as agg_lib
+from repro.core import lsh as lsh_lib
+
+
+@jax.jit
+def _hash_chunk(rows, params):
+    # The exact batch hash (same projection, signature, modulus), so
+    # streamed ids match what a cold rebuild over the same rows produces.
+    return lsh_lib.fine_bucket_ids(rows, params)
+
+
+@partial(
+    jax.jit, static_argnames=("chunk",), donate_argnums=(0, 1, 2, 3, 4)
+)
+def _ingest_chunk(
+    buffer, bucket_of, sums, counts, extras, extra_rows,
+    rows, ids, valid, n, *, chunk,
+):
+    """One fixed-shape delta update; invalid (padding) rows contribute 0.
+
+    The state arrays are *donated*: XLA updates them in place, so one
+    append costs O(B·D) scatter work, not an O(capacity) copy of the
+    preallocated buffers.  Consequently every externally visible snapshot
+    of this state (``live_stats``, the rebucket index) must be a copy.
+    """
+    v_f = valid.astype(jnp.float32)
+    v_i = valid.astype(jnp.int32)
+    safe_ids = jnp.where(valid, ids, 0)
+    sums = sums.at[safe_ids].add(rows.astype(jnp.float32) * v_f[:, None])
+    counts = counts.at[safe_ids].add(v_i)
+    extras = {
+        k: e.at[safe_ids].add(
+            extra_rows[k] * v_f.reshape((chunk,) + (1,) * (e.ndim - 1))
+        )
+        for k, e in extras.items()
+    }
+    # Out-of-bounds row positions (padding) are dropped, never clamped.
+    row_pos = jnp.where(valid, n + jnp.arange(chunk, dtype=jnp.int32),
+                        buffer.shape[0])
+    buffer = buffer.at[row_pos].set(rows, mode="drop")
+    bucket_of = bucket_of.at[row_pos].set(ids, mode="drop")
+    return buffer, bucket_of, sums, counts, extras
+
+
+@partial(jax.jit, static_argnames=("base_buckets",))
+def _rebucket(bucket_of, n, *, base_buckets):
+    """Full-shape index rebuild: live rows sorted by bucket, dead rows last."""
+    capacity = bucket_of.shape[0]
+    live = jnp.arange(capacity, dtype=jnp.int32) < n
+    key = jnp.where(live, bucket_of, base_buckets)
+    perm = jnp.argsort(key, stable=True).astype(jnp.int32)
+    counts = jax.ops.segment_sum(
+        live.astype(jnp.int32), jnp.where(live, bucket_of, 0),
+        num_segments=base_buckets,
+    )
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)]
+    )
+    return perm, offsets, counts
+
+
+class StreamingAggregate:
+    """Online writer for one shard's level-0 aggregate state.
+
+    Args:
+      params: LSH family whose ``config.n_buckets`` is the pyramid's
+        *base* (finest) resolution; appends hash rows with it so streamed
+        ids match what a cold rebuild would produce.
+      n_features: row width.
+      capacity: preallocated row budget (fixed shapes; appends beyond it
+        raise).
+      chunk: jit chunk size — appends are padded to multiples of this.
+      rebucket_frac: schedule a re-bucket once the index lags more than
+        this fraction of the live points.
+      extra_shapes: additional additive per-bucket statistics to maintain,
+        name -> trailing shape of the *row* contribution (e.g. a label
+        one-hot ``(n_classes,)``).  ``append`` then takes matching arrays.
+    """
+
+    def __init__(
+        self,
+        params: lsh_lib.LSHParams,
+        n_features: int,
+        *,
+        capacity: int,
+        chunk: int = 256,
+        rebucket_frac: float = 0.25,
+        extra_shapes: dict[str, tuple[int, ...]] | None = None,
+    ):
+        cfg = params.config
+        if cfg.base_buckets not in (None, cfg.n_buckets):
+            raise ValueError(
+                "streaming params must be flat at the base resolution "
+                "(config.n_buckets == pyramid base_buckets)"
+            )
+        self.params = params
+        self.base_buckets = cfg.n_buckets
+        self.capacity = int(capacity)
+        self.chunk = int(chunk)
+        self.rebucket_frac = float(rebucket_frac)
+
+        self.buffer = jnp.zeros((capacity, n_features), jnp.float32)
+        self.bucket_of = jnp.zeros((capacity,), jnp.int32)
+        self.sums = jnp.zeros((self.base_buckets, n_features), jnp.float32)
+        self.counts = jnp.zeros((self.base_buckets,), jnp.int32)
+        self.extras = {
+            k: jnp.zeros((self.base_buckets,) + tuple(shape), jnp.float32)
+            for k, shape in (extra_shapes or {}).items()
+        }
+        self.n = 0
+
+        # Index snapshot (as of the last rebucket) + staleness accounting.
+        self._indexed_n = 0
+        self._indexed: tuple | None = None  # (stats dict, BucketIndex)
+
+    # ------------------------------------------------------------------
+    @property
+    def stale_points(self) -> int:
+        """Points appended since the index was last rebuilt."""
+        return self.n - self._indexed_n
+
+    @property
+    def needs_rebucket(self) -> bool:
+        return self.stale_points > self.rebucket_frac * max(self._indexed_n, 1)
+
+    # ------------------------------------------------------------------
+    def append(self, rows, **extra_rows) -> int:
+        """Delta-update statistics with a batch of rows; returns new ``n``.
+
+        ``extra_rows`` must provide one [B, ...] array per configured extra
+        statistic.  Work is O(B·D) scatter adds — no rebuild.
+        """
+        rows = jnp.asarray(rows, jnp.float32)
+        b = rows.shape[0]
+        if set(extra_rows) != set(self.extras):
+            raise ValueError(
+                f"extra rows {sorted(extra_rows)} != configured "
+                f"{sorted(self.extras)}"
+            )
+        if self.n + b > self.capacity:
+            raise ValueError(
+                f"append of {b} rows exceeds capacity "
+                f"({self.n}/{self.capacity} used)"
+            )
+        for start in range(0, b, self.chunk):
+            stop = min(start + self.chunk, b)
+            self._append_chunk(
+                rows[start:stop],
+                {k: jnp.asarray(v[start:stop], jnp.float32)
+                 for k, v in extra_rows.items()},
+            )
+        return self.n
+
+    def _append_chunk(self, rows, extra_rows) -> None:
+        b = rows.shape[0]
+        pad = self.chunk - b
+        if pad:
+            rows = jnp.concatenate(
+                [rows, jnp.zeros((pad, rows.shape[1]), rows.dtype)]
+            )
+            extra_rows = {
+                k: jnp.concatenate(
+                    [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)]
+                )
+                for k, v in extra_rows.items()
+            }
+        valid = jnp.arange(self.chunk, dtype=jnp.int32) < b
+        ids = _hash_chunk(rows, self.params)
+        (self.buffer, self.bucket_of, self.sums, self.counts,
+         self.extras) = _ingest_chunk(
+            self.buffer, self.bucket_of, self.sums, self.counts,
+            self.extras, extra_rows, rows, ids, valid,
+            jnp.int32(self.n), chunk=self.chunk,
+        )
+        self.n += b
+
+    # ------------------------------------------------------------------
+    def live_stats(self) -> dict[str, jax.Array]:
+        """Exact per-bucket statistics including every appended row.
+
+        Returned arrays are copies: the live state buffers are donated to
+        the jitted ingest kernel, so references into them would be
+        invalidated by the next ``append``.
+        """
+        out = {"sums": self.sums, "counts": self.counts}
+        out.update(self.extras)
+        return {k: jnp.array(v, copy=True) for k, v in out.items()}
+
+    def rebucket(self) -> None:
+        """Rebuild the perm/offsets index over the live rows (O(N log N))
+        and snapshot the statistics at the same instant."""
+        perm, offsets, counts = _rebucket(
+            self.bucket_of, jnp.int32(self.n), base_buckets=self.base_buckets
+        )
+        index = agg_lib.BucketIndex(
+            perm=perm, offsets=offsets,
+            bucket_of=jnp.array(self.bucket_of, copy=True),
+        )
+        self._indexed = (self.live_stats(), index)
+        self._indexed_n = self.n
+
+    def level0(self, *, trim: bool = True):
+        """(stats, index, n) snapshot as of the last rebucket.
+
+        Re-buckets first when the staleness schedule says so (or when no
+        index exists yet).  With ``trim``, index arrays are sliced to the
+        live row count so the result adopts cleanly into a ``Pyramid`` over
+        the materialized ``data()`` rows.
+        """
+        if self._indexed is None or self.needs_rebucket:
+            self.rebucket()
+        stats, index = self._indexed
+        n = self._indexed_n
+        if trim:
+            index = agg_lib.BucketIndex(
+                perm=index.perm[:n],
+                offsets=index.offsets,
+                bucket_of=index.bucket_of[:n],
+            )
+        return dict(stats), index, n
+
+    def data(self) -> np.ndarray:
+        """Materialize the live rows (host copy) for servable construction."""
+        return np.asarray(self.buffer[: self.n])

@@ -179,6 +179,76 @@ def test_cache_lru_eviction_and_invalidate(knn_servable):
     assert len(cache) == 0
 
 
+def test_cache_eviction_order_is_lru_not_fifo(knn_servable):
+    """A get refreshes recency: touching the oldest entry must save it."""
+    cache = AggregateCache(capacity=2)
+    cache.get_or_build(knn_servable, 32.0)
+    cache.get_or_build(knn_servable, 16.0)
+    _, hit = cache.get_or_build(knn_servable, 32.0)   # refresh r=32
+    assert hit
+    cache.get_or_build(knn_servable, 64.0)            # evicts r=16, not r=32
+    _, hit32 = cache.get_or_build(knn_servable, 32.0)
+    assert hit32
+    _, hit16 = cache.get_or_build(knn_servable, 16.0)
+    assert not hit16
+    assert cache.evictions == 2
+
+
+def test_cache_key_quantizes_ratio_drift(knn_servable):
+    """Float drift in the requested ratio must not split cache entries:
+    keys carry the realized bucket count of the pyramid grid."""
+    assert knn_servable.cache_key(20.0) == knn_servable.cache_key(20.0 + 1e-7)
+    r_q = knn_servable.quantized_ratio(20.0)
+    assert knn_servable.cache_key(20.0) == knn_servable.cache_key(r_q)
+    cache = AggregateCache()
+    cache.get_or_build(knn_servable, 20.0)
+    _, hit = cache.get_or_build(knn_servable, 20.0 * (1 + 1e-9))
+    assert hit
+
+
+def test_cache_miss_coarsens_instead_of_rebuilding(knn_servable):
+    """A request at a coarser ratio is served by merging the resident
+    level-0 statistics (coarsened_hits), not by a cold rebuild."""
+    from repro.apps.knn import KNNServable as _KNN
+    servable = _KNN(
+        knn_servable.train_x, knn_servable.train_y, n_classes=N_CLASSES,
+        k=3, lsh_key=jax.random.PRNGKey(7),
+    )
+    cache = AggregateCache()
+    fine, hit = cache.get_or_build(servable, 8.0)
+    assert not hit and cache.coarsened_hits == 0
+    coarse, hit = cache.get_or_build(servable, 32.0)
+    assert not hit and cache.coarsened_hits == 1
+    assert servable.store.builds == 1 and servable.store.merges == 1
+    # The coarse level is an exact merge of the fine one.
+    f = coarse.agg.n_buckets
+    assert fine.agg.n_buckets % f == 0
+    factor = fine.agg.n_buckets // f
+    merged_counts = np.asarray(fine.agg.counts).reshape(f, factor).sum(1)
+    np.testing.assert_array_equal(np.asarray(coarse.agg.counts),
+                                  merged_counts)
+
+
+def test_cache_invalidate_after_shard_update(knn_servable):
+    """Shard update flow: invalidate drops cache entries AND the store's
+    pyramid, so the next request rebuilds instead of resurfacing stale
+    aggregates as a coarsened hit."""
+    from repro.apps.knn import KNNServable as _KNN
+    servable = _KNN(
+        knn_servable.train_x, knn_servable.train_y, n_classes=N_CLASSES,
+        k=3, lsh_key=jax.random.PRNGKey(7),
+    )
+    cache = AggregateCache()
+    cache.get_or_build(servable, 20.0)
+    assert servable.store.stats()["pyramids"] == 1
+    assert cache.invalidate(servable) == 1
+    assert servable.store.stats()["pyramids"] == 0
+    builds_before = servable.store.builds
+    _, hit = cache.get_or_build(servable, 20.0)
+    assert not hit
+    assert servable.store.builds == builds_before + 1  # rebuilt, not merged
+
+
 # ---------------------------------------------------------------------------
 # deadline controller
 # ---------------------------------------------------------------------------
@@ -347,6 +417,7 @@ def test_server_cache_and_metrics(knn_servable):
     assert summary["n_batches"] == 2
     assert summary["cache"] == {
         "hits": 1, "misses": 1, "hit_rate": 0.5, "size": 1, "evictions": 0,
+        "coarsened_hits": 0, "restored_hits": 0, "coarsened_hit_rate": 0.0,
     }
     assert summary["shuffle_bytes_total"] > 0
     assert summary["eps_granted"]["max"] == server.controller.policy.eps_max
@@ -354,6 +425,92 @@ def test_server_cache_and_metrics(knn_servable):
     assert summary["stage1_latency_ms"]["p99"] >= \
         summary["stage1_latency_ms"]["p50"]
     assert summary["mean_batch_occupancy"] == 3.0
+
+
+def test_server_snapshot_then_warm_start(knn_servable, tmp_path):
+    """save_aggregates -> fresh server warm_start: the first request hits
+    the cache (no LSH + segment-sum generation on the serving path)."""
+    from repro.apps.knn import KNNServable as _KNN
+    server_a = _server(knn_servable)
+    server_a.submit("knn", (knn_servable.train_x[0],), deadline_s=10.0)
+    server_a.drain()
+    assert server_a.save_aggregates(tmp_path / "agg") == 1
+
+    fresh = _KNN(
+        knn_servable.train_x, knn_servable.train_y, n_classes=N_CLASSES,
+        k=3, lsh_key=jax.random.PRNGKey(7),
+    )
+    server_b = _server(fresh)
+    assert server_b.warm_start(tmp_path / "agg") == {
+        "restored": 1, "warmed": 1,
+    }
+    assert fresh.store.restores >= 1
+    server_b.submit("knn", (knn_servable.train_x[0],), deadline_s=10.0)
+    (resp,) = [r for r in server_b.drain() if not r.reexecuted]
+    assert resp.cache_hit
+    summary = server_b.summary()
+    assert summary["cache"]["hits"] >= 1
+    # The warm entry's snapshot origin is metered (requests themselves are
+    # plain hits by then).
+    assert summary["cache"]["restored_hits"] == 1
+
+    # A snapshot that matches nothing reports restored=0 (cold-built warm
+    # entries), so the caller can tell the warm start silently degraded.
+    other = _KNN(
+        knn_servable.train_x, knn_servable.train_y, n_classes=N_CLASSES,
+        k=3, lsh_key=jax.random.PRNGKey(321),
+    )
+    server_c = _server(other)
+    out = server_c.warm_start(tmp_path / "agg")
+    assert out["restored"] == 0 and out["warmed"] == 1
+
+
+def test_server_warm_start_across_store_topologies(
+    knn_servable, cf_servable, tmp_path
+):
+    """A snapshot saved by servables with *private* stores must warm-start
+    a server whose servables *share* one store (and vice versa): adoption
+    is by identity, not by store position."""
+    from repro.apps.cf import CFServable as _CF
+    from repro.apps.knn import KNNServable as _KNN
+    from repro.store import AggregateStore
+
+    ctl = _controller()
+    ctl.set_model(
+        "cf", CostModel(c_fixed=0.0, c_stage1=0.0, c_stage2=1.0 / N_CF)
+    )
+
+    def knn_of(store):
+        return _KNN(knn_servable.train_x, knn_servable.train_y,
+                    n_classes=N_CLASSES, k=3, lsh_key=jax.random.PRNGKey(7),
+                    store=store)
+
+    def cf_of(store):
+        return _CF(cf_servable.ratings, cf_servable.mask,
+                   lsh_key=jax.random.PRNGKey(8), store=store)
+
+    # Saver: two private stores -> store0/, store1/ subdirs.
+    saver = Server([knn_of(None), cf_of(None)], controller=ctl,
+                   batcher=ContinuousBatcher(max_batch=4, pad_sizes=(4,)))
+    for s in saver.servables.values():
+        s.build(ctl.policy.compression_ratio)
+    assert saver.save_aggregates(tmp_path / "agg") == 2
+
+    # Restorer: one shared store.
+    shared = AggregateStore()
+    restorer = Server([knn_of(shared), cf_of(shared)], controller=ctl,
+                      batcher=ContinuousBatcher(max_batch=4, pad_sizes=(4,)))
+    assert restorer.warm_start(tmp_path / "agg") == {
+        "restored": 2, "warmed": 2,
+    }
+    assert shared.restores == 2
+    # And the reverse: shared snapshot into private stores.
+    assert restorer.save_aggregates(tmp_path / "agg2") == 2
+    private = Server([knn_of(None), cf_of(None)], controller=ctl,
+                     batcher=ContinuousBatcher(max_batch=4, pad_sizes=(4,)))
+    assert private.warm_start(tmp_path / "agg2") == {
+        "restored": 2, "warmed": 2,
+    }
 
 
 def test_server_heterogeneous_kinds(knn_servable, cf_servable):
