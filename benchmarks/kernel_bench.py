@@ -1,0 +1,232 @@
+"""Fused hot-path kernel benchmark: BENCH json + the perf trajectory file.
+
+Compares the fused two-stage kernels against the unfused
+materialize-then-reduce compositions they replaced, at N in {10k, 100k, 1M}
+(CI tiny: {2k, 10k}):
+
+  * stage 1  — ``distance_topk``  vs  ``knn_distance`` + ``local_topk``
+  * stage 2  — ``refine_distances``  vs  the [Q,B,D] gather + batched einsum
+
+Reports p50 wall latency, effective GB/s moved, and the *HBM-bytes model*
+per path.  On CPU the dispatch layer runs the bit-compatible jnp oracles,
+so wall-clock speedup is not the signal — the bytes model is the
+architecture-independent accounting of what the fusion eliminates (the
+[Q,N] write+re-read and the [Q,B,D] gather round-trip), and the guard
+(``BENCH_FAIL`` on < 2x reduction at the largest N) pins it.  A second
+guard replays `accurateml_map` against the unfused composition and demands
+bit-identical output.
+
+The summary is also written to ``BENCH_kernels.json`` at the repo root —
+the start of the kernel perf trajectory (commit it when numbers move).
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench
+    REPRO_BENCH_TINY=1 ...   # CI smoke sizes
+"""
+from __future__ import annotations
+
+import json
+import os
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.apps import knn
+from repro.core import aggregate as agg_lib
+from repro.core import correlation as corr_lib
+from repro.core import lsh as lsh_lib
+from repro.kernels import ops as kernel_ops
+
+TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
+NS = [2_000, 10_000] if TINY else [10_000, 100_000, 1_000_000]
+# Q stays at serving size even in tiny mode: the stage-1 bytes reduction is
+# ~1 + 2Q/D, so shrinking Q would benchmark a different regime than the 2x
+# acceptance gate measures at N=100k.
+Q = 64
+D = 64
+K = 5
+REFINE_FRAC = 0.01  # B = ceil(N/100) refined points per query
+
+OUT_JSON = Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
+F32 = 4
+
+
+def _bytes_model_stage1(q: int, n: int, d: int, k: int) -> dict:
+    """HBM traffic of each stage-1 path (float32 accounting).
+
+    Unfused materializes the [Q,N] distance matrix (one write) and top_k
+    re-reads it; fused streams point tiles once and keeps the running
+    k-best in VMEM scratch.
+    """
+    inputs = n * d * F32 + q * d * F32
+    out = q * k * (F32 + F32)  # dists f32 + labels i32
+    unfused = inputs + 2 * q * n * F32 + out
+    fused = inputs + out
+    return {"unfused": unfused, "fused": fused,
+            "reduction": unfused / fused}
+
+
+def _bytes_model_stage2(q: int, b: int, d: int) -> dict:
+    """HBM traffic of each stage-2 exact-distance path.
+
+    Unfused gathers [Q,B,D] (read rows + write gathered tensor) then the
+    einsum re-reads it; fused reads each selected row from HBM exactly once
+    via scalar-prefetch DMA.
+    """
+    out = q * b * F32
+    unfused = 3 * q * b * d * F32 + out  # gather read+write, einsum re-read
+    fused = q * b * d * F32 + out
+    return {"unfused": unfused, "fused": fused,
+            "reduction": unfused / fused}
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _unfused_stage1(test_x, train_x, train_y, *, k):
+    d = kernel_ops.knn_distance(test_x, train_x)
+    return knn.local_topk(d, train_y, k)
+
+
+@jax.jit
+def _unfused_stage2(test_x, train_x, idx, valid):
+    ref_x = train_x[idx]                                     # [Q,B,D]
+    q2 = jnp.sum(test_x.astype(jnp.float32) ** 2, axis=-1)
+    x2 = jnp.sum(ref_x.astype(jnp.float32) ** 2, axis=-1)
+    cross = jnp.einsum(
+        "qd,qbd->qb", test_x.astype(jnp.float32), ref_x.astype(jnp.float32)
+    )
+    d = jnp.maximum(q2[:, None] - 2.0 * cross + x2, 0.0)
+    return jnp.where(valid, d, knn.BIG)
+
+
+def _case(n: int, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    train_x = jax.random.normal(key, (n, D))
+    train_y = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 10)
+    test_x = jax.random.normal(jax.random.fold_in(key, 2), (Q, D))
+    return train_x, train_y, test_x
+
+
+def _bench_n(n: int) -> dict:
+    train_x, train_y, test_x = _case(n)
+    b = max(K, int(np.ceil(REFINE_FRAC * n)))
+    key = jax.random.PRNGKey(n)
+    idx = jax.random.randint(key, (Q, b), 0, n)
+    valid = jax.random.uniform(jax.random.fold_in(key, 1), (Q, b)) < 0.9
+
+    t_unf1 = timeit(_unfused_stage1, test_x, train_x, train_y, k=K)
+    t_fus1 = timeit(kernel_ops.distance_topk, test_x, train_x, train_y, k=K)
+    t_unf2 = timeit(_unfused_stage2, test_x, train_x, idx, valid)
+    t_fus2 = timeit(kernel_ops.refine_distances, test_x, train_x, idx, valid)
+
+    bm1 = _bytes_model_stage1(Q, n, D, K)
+    bm2 = _bytes_model_stage2(Q, b, D)
+    return {
+        "n": n, "q": Q, "d": D, "k": K, "b": b,
+        "stage1": {
+            "p50_unfused_s": t_unf1, "p50_fused_s": t_fus1,
+            "speedup": t_unf1 / t_fus1,
+            "bytes_unfused": bm1["unfused"], "bytes_fused": bm1["fused"],
+            "bytes_reduction": bm1["reduction"],
+            "gbps_fused": bm1["fused"] / t_fus1 / 1e9,
+        },
+        "stage2": {
+            "p50_unfused_s": t_unf2, "p50_fused_s": t_fus2,
+            "speedup": t_unf2 / t_fus2,
+            "bytes_unfused": bm2["unfused"], "bytes_fused": bm2["fused"],
+            "bytes_reduction": bm2["reduction"],
+            "gbps_fused": bm2["fused"] / t_fus2 / 1e9,
+        },
+    }
+
+
+def _check_bit_identity() -> bool:
+    """Fused `accurateml_map` must equal the unfused composition bitwise."""
+    n = 2_000
+    train_x, train_y, test_x = _case(n, seed=7)
+    cfg = lsh_lib.config_for_compression(n, 16.0, n_hashes=4,
+                                         bucket_width=4.0)
+    params = lsh_lib.init_lsh(jax.random.PRNGKey(3), D, cfg)
+    knn_agg = knn.build_knn_aggregates(train_x, train_y, params, 10)
+    budget = 100
+
+    @jax.jit
+    def unfused(train_x, train_y, knn_agg, test_x):
+        agg = knn_agg.agg
+        d_cent = kernel_ops.knn_distance(test_x, agg.means)
+        d_cent = jnp.where(agg.counts[None, :] > 0, d_cent, knn.BIG)
+        rankings = corr_lib.rank_buckets_multi(-d_cent, agg.counts)
+        idx, valid = jax.vmap(
+            lambda r: agg_lib.refinement_indices(agg, r, budget)
+        )(rankings)
+        covered = jax.vmap(
+            lambda r: agg_lib.buckets_fully_covered(agg, r, budget)
+        )(rankings) & (agg.counts[None, :] > 0)
+        d_ref = _unfused_stage2(test_x, train_x, idx, valid)
+        cand_d = jnp.concatenate(
+            [jnp.where(covered, knn.BIG, d_cent), d_ref], axis=1
+        )
+        cand_l = jnp.concatenate(
+            [jnp.broadcast_to(knn_agg.bucket_labels[None, :], d_cent.shape),
+             train_y[idx]], axis=1,
+        )
+        return knn.local_topk(cand_d, cand_l, K)
+
+    got = knn.accurateml_map(train_x, train_y, knn_agg, test_x,
+                             k=K, refine_budget=budget)
+    want = unfused(train_x, train_y, knn_agg, test_x)
+    return all(
+        (np.asarray(g) == np.asarray(w)).all() for g, w in zip(got, want)
+    )
+
+
+def run():
+    rows = [_bench_n(n) for n in NS]
+    for r in rows:
+        for stage in ("stage1", "stage2"):
+            s = r[stage]
+            emit(
+                f"kernel_{stage}_fused_n{r['n']}",
+                s["p50_fused_s"] * 1e6,
+                f"speedup={s['speedup']:.2f};"
+                f"bytes_reduction={s['bytes_reduction']:.2f};"
+                f"gbps={s['gbps_fused']:.2f}",
+            )
+
+    bit_identical = _check_bit_identity()
+    if not bit_identical:
+        print("BENCH_FAIL,kernel_bench:fused accurateml_map not "
+              "bit-identical to unfused path")
+    # Acceptance gate at the largest N measured (100k in the full run):
+    # the fusion must eliminate >= 2x of the modeled HBM traffic.
+    gate = rows[-1]
+    if gate["stage1"]["bytes_reduction"] < 2.0:
+        print("BENCH_FAIL,kernel_bench:stage1 bytes reduction "
+              f"{gate['stage1']['bytes_reduction']:.2f} < 2x at "
+              f"N={gate['n']}")
+    if gate["stage2"]["bytes_reduction"] < 2.0:
+        print("BENCH_FAIL,kernel_bench:stage2 bytes reduction "
+              f"{gate['stage2']['bytes_reduction']:.2f} < 2x at "
+              f"N={gate['n']}")
+
+    summary = {
+        "tiny": TINY, "sizes": rows, "bit_identical": bit_identical,
+        "gate_n": gate["n"],
+        "stage1_bytes_reduction": gate["stage1"]["bytes_reduction"],
+        "stage2_bytes_reduction": gate["stage2"]["bytes_reduction"],
+    }
+    if not TINY:  # smoke runs must not clobber the committed trajectory
+        OUT_JSON.write_text(json.dumps(summary, indent=2) + "\n")
+    print("BENCH " + json.dumps({"kernel_bench": summary}))
+    return summary
+
+
+if __name__ == "__main__":
+    import sys
+
+    s = run()
+    ok = (s["bit_identical"] and s["stage1_bytes_reduction"] >= 2.0
+          and s["stage2_bytes_reduction"] >= 2.0)
+    sys.exit(0 if ok else 1)

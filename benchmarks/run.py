@@ -38,7 +38,8 @@ class _FailScanningTee(io.TextIOBase):
 def main() -> None:
     from benchmarks import (
         fig4_breakdown, fig5_shuffle, fig6_time_reduction, fig7_accuracy,
-        fig8_vs_sampling, fig9_k_sweep, roofline, serve_latency, store_reuse,
+        fig8_vs_sampling, fig9_k_sweep, kernel_bench, roofline,
+        serve_latency, store_reuse,
     )
 
     out = _FailScanningTee(sys.stdout)
@@ -49,7 +50,7 @@ def main() -> None:
     try:
         for mod in (fig4_breakdown, fig5_shuffle, fig6_time_reduction,
                     fig7_accuracy, fig8_vs_sampling, fig9_k_sweep,
-                    serve_latency, store_reuse, roofline):
+                    kernel_bench, serve_latency, store_reuse, roofline):
             name = mod.__name__.rsplit(".", 1)[-1]
             try:
                 summary = mod.run()

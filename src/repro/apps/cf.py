@@ -212,33 +212,18 @@ def accurateml_map(
     use = valid & jnp.take_along_axis(
         covered, agg.bucket_of[idx], axis=1
     )                                                    # [Q,B]
-    centred_all = (ratings - user_means(ratings, mask)) * mask
-    ref_r = ratings[idx]                                 # [Q,B,I]
-    ref_m = mask[idx] * use[..., None]
-    ref_c = centred_all[idx] * use[..., None]
-
-    af = active.astype(jnp.float32)
-    am = active_mask.astype(jnp.float32)
-    a_mean = jnp.sum(af * am, axis=1, keepdims=True) / jnp.maximum(
-        jnp.sum(am, axis=1, keepdims=True), 1.0
+    # Gather-free neighbour selection: the scalar-prefetch kernel reads each
+    # selected user's centred/mask rows straight from HBM, forms the shrunk
+    # Pearson weight in registers, and accumulates the weighted sums — the
+    # [Q,B,I] gathered tensors never materialize.
+    _, num_delta, den_delta = kernel_ops.cf_refine(
+        active, active_mask, ratings, mask, idx, use, shrink=SHRINK
     )
-    ac = (af - a_mean) * am                              # [Q,I]
-
-    w_num = jnp.einsum("qi,qbi->qb", ac, ref_c)
-    a_sq = jnp.einsum("qi,qbi->qb", ac * ac, ref_m)
-    u_sq = jnp.einsum("qi,qbi->qb", am, ref_c * ref_c)
-    w_ref = w_num / jnp.sqrt(jnp.maximum(a_sq * u_sq, 1e-12))
-    co_ref = jnp.einsum("qi,qbi->qb", am, ref_m)
-    w_ref = shrink_weights(w_ref, co_ref)
-    w_ref = jnp.where(use, w_ref, 0.0)                   # [Q,B]
 
     # Subtract the covered buckets' surrogate, add their exact terms.
     w_g_cov = jnp.where(covered, w_g, 0.0)
-    num = num - w_g_cov @ cf_agg.s + jnp.einsum("qb,qbi->qi", w_ref, ref_c)
-    den = (
-        den - jnp.abs(w_g_cov) @ cf_agg.c
-        + jnp.einsum("qb,qbi->qi", jnp.abs(w_ref), ref_m)
-    )
+    num = num - w_g_cov @ cf_agg.s + num_delta
+    den = den - jnp.abs(w_g_cov) @ cf_agg.c + den_delta
     return num, den
 
 

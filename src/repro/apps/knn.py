@@ -26,10 +26,8 @@ from repro.core import engine as engine_lib
 from repro.core import lsh as lsh_lib
 from repro.core import refine as refine_lib
 from repro.kernels import ops as kernel_ops
+from repro.kernels.topk_stream import BIG  # shared sentinel: one definition
 from repro.serve import servable as serve_servable
-
-
-BIG = jnp.float32(3.0e38)
 
 
 # ---------------------------------------------------------------------------
@@ -68,11 +66,22 @@ def majority_vote(
 def merge_topk(
     gathered_dists: jax.Array, gathered_labels: jax.Array, k: int
 ) -> tuple[jax.Array, jax.Array]:
-    """[S,Q,k] shard-local top-k -> [Q,k] global top-k (the reduce stage)."""
-    s, q, kk = gathered_dists.shape
-    flat_d = jnp.moveaxis(gathered_dists, 0, 1).reshape(q, s * kk)
-    flat_l = jnp.moveaxis(gathered_labels, 0, 1).reshape(q, s * kk)
-    return local_topk(flat_d, flat_l, k)
+    """[S,Q,k] shard-local top-k -> [Q,k] global top-k (the reduce stage).
+
+    Folds shards pairwise through the seeded streaming selection instead of
+    materializing the [Q, S*k] moveaxis/reshape copies: shard s's k-best
+    merges into the running best of shards 0..s-1.  Equivalent to one top_k
+    over the flattened candidates (same (value, shard-order) tie-break).
+    """
+    s = gathered_dists.shape[0]
+    d, l = gathered_dists[0], gathered_labels[0]
+    if s == 1 or d.shape[-1] != k:
+        d, l = local_topk(d, l, k)  # sort/trim so the seed is a [Q,k] best
+    for i in range(1, s):
+        d, l = kernel_ops.candidate_topk(
+            gathered_dists[i], gathered_labels[i], d, l, k=k
+        )
+    return d, l
 
 
 # ---------------------------------------------------------------------------
@@ -81,9 +90,12 @@ def merge_topk(
 
 @partial(jax.jit, static_argnames=("k",))
 def exact_map(train_x, train_y, test_x, *, k: int):
-    """Basic map task: all original points (paper Fig. 2a)."""
-    d = pairwise_sq_dists(test_x, train_x)
-    return local_topk(d, train_y, k)
+    """Basic map task: all original points (paper Fig. 2a).
+
+    Fused distance+top-k: point tiles stream through VMEM and fold into a
+    running k-best, so the [Q, N] distance matrix never touches HBM.
+    """
+    return kernel_ops.distance_topk(test_x, train_x, train_y, k=k)
 
 
 @partial(jax.jit, static_argnames=("k", "n_sample"))
@@ -91,8 +103,7 @@ def sampled_map(train_x, train_y, test_x, sample_idx, *, k: int, n_sample: int):
     """Prior-art approximation: uniform subset of ``n_sample`` points."""
     sub_x = train_x[sample_idx[:n_sample]]
     sub_y = train_y[sample_idx[:n_sample]]
-    d = pairwise_sq_dists(test_x, sub_x)
-    return local_topk(d, sub_y, k)
+    return kernel_ops.distance_topk(test_x, sub_x, sub_y, k=k)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -185,17 +196,24 @@ def accurateml_map(
     original points were processed *for that query* (Alg. 1 runs per test
     point).  Refined buckets' centroids are masked out of the candidate set
     (replace, not double-count); final output is a joint top-k over
-    [unrefined centroids ∪ refined originals].
+    [unrefined centroids ∪ refined originals], chained through one running
+    k-best (centroids seed it, refined candidates fold in) instead of a
+    concatenate + top_k tail.
     """
     agg = knn_agg.agg
-    # ---- stage 1: initial output from aggregated points ----
+    if refine_budget <= 0:
+        # Pure stage 1: fused distance+top-k over the aggregated points —
+        # the [Q, K] matrix is never needed (no ranking to derive from it).
+        return kernel_ops.distance_topk(
+            test_x, agg.means, knn_agg.bucket_labels, agg.counts > 0, k=k
+        )
+
+    # ---- stage 1: initial output + correlations from aggregated points ----
+    # The full [Q, K] distances are inherent here: every bucket needs a
+    # correlation for the per-query refinement ranking (Alg. 1 line 2).
     d_cent = pairwise_sq_dists(test_x, agg.means)            # [Q, K]
     d_cent = jnp.where(agg.counts[None, :] > 0, d_cent, BIG)
     corr = -d_cent                                           # [Q, K]
-
-    if refine_budget <= 0:
-        dists, labels = local_topk(d_cent, knn_agg.bucket_labels, k)
-        return dists, labels
 
     # ---- stage 2: per-query refinement of the top-correlated buckets ----
     rankings = corr_lib.rank_buckets_multi(corr, agg.counts)  # [Q, K]
@@ -207,28 +225,20 @@ def accurateml_map(
     )(rankings)                                               # [Q, K]
     covered = covered & (agg.counts[None, :] > 0)
 
-    ref_x = train_x[idx]                                      # [Q, B, D]
-    ref_y = train_y[idx]                                      # [Q, B]
-    # Per-query exact distances: |q|^2 - 2 q.x + |x|^2 via a batched dot.
-    q2 = jnp.sum(test_x.astype(jnp.float32) ** 2, axis=-1)    # [Q]
-    x2 = jnp.sum(ref_x.astype(jnp.float32) ** 2, axis=-1)     # [Q, B]
-    cross = jnp.einsum(
-        "qd,qbd->qb", test_x.astype(jnp.float32),
-        ref_x.astype(jnp.float32),
-    )
-    d_ref = jnp.maximum(q2[:, None] - 2.0 * cross + x2, 0.0)  # [Q, B]
-    d_ref = jnp.where(valid, d_ref, BIG)
+    # Gather-free exact distances: each selected original is read straight
+    # from HBM by the scalar-prefetch kernel ([Q,B,D] never materializes).
+    d_ref = kernel_ops.refine_distances(test_x, train_x, idx, valid)
+    ref_y = train_y[idx]                                      # [Q, B] ints
     d_cent_masked = jnp.where(covered, BIG, d_cent)
 
-    cand_d = jnp.concatenate([d_cent_masked, d_ref], axis=1)
-    cand_l = jnp.concatenate(
-        [
-            jnp.broadcast_to(knn_agg.bucket_labels[None, :], d_cent.shape),
-            ref_y,
-        ],
-        axis=1,
+    # Fused finalize: masked centroids seed the running k-best, refined
+    # candidates merge into the same scratch (replaces concatenate+top_k).
+    best_d, best_l = kernel_ops.candidate_topk(
+        d_cent_masked,
+        jnp.broadcast_to(knn_agg.bucket_labels[None, :], d_cent.shape),
+        k=k,
     )
-    return local_topk(cand_d, cand_l, k)
+    return kernel_ops.candidate_topk(d_ref, ref_y, best_d, best_l, k=k)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: fused squared-L2 distance + streaming top-k.
+
+The kNN map-task hot loop without the intermediate: grid (Q/TQ, N/TN) with
+the point axis minor, each step loads a [TN, D] point tile into VMEM, runs
+the cross matmul on the MXU, and folds the tile's distances straight into a
+per-query running k-best held in VMEM scratch (see ``topk_stream``).  The
+[Q, N] distance matrix never exists in HBM and there is no second
+``top_k`` pass over it — HBM traffic drops from O(Q·N) to O(N·D + Q·k).
+
+``valid`` masks points out of the selection with the BIG sentinel (empty
+aggregate buckets, wrapper padding); zero-padding of the feature axis is
+distance-neutral as in ``knn_distance``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.topk_stream import BIG, merge_kbest, pad_to_multiple
+
+
+def _kernel(q_ref, p_ref, l_ref, v_ref, out_d_ref, out_l_ref,
+            best_d, best_l, *, k):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        best_d[...] = jnp.full_like(best_d[...], BIG)
+        best_l[...] = jnp.zeros_like(best_l[...])
+
+    q = q_ref[...].astype(jnp.float32)              # [TQ, D]
+    p = p_ref[...].astype(jnp.float32)              # [TN, D]
+    cross = jax.lax.dot_general(
+        q, p, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                               # [TQ, TN]
+    q2 = jnp.sum(q * q, axis=1, keepdims=True)      # [TQ, 1]
+    p2 = jnp.sum(p * p, axis=1, keepdims=True).T    # [1, TN]
+    d = jnp.maximum(q2 - 2.0 * cross + p2, 0.0)
+    d = jnp.where(v_ref[...] != 0, d, BIG)          # [1,TN] mask broadcast
+
+    lab = jnp.broadcast_to(l_ref[...], d.shape)     # [TQ, TN]
+    nd, nl = merge_kbest(best_d[...], best_l[...], d, lab, k)
+    best_d[...] = nd
+    best_l[...] = nl
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        out_d_ref[...] = best_d[...]
+        out_l_ref[...] = best_l[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "tq", "tn", "interpret")
+)
+def distance_topk_pallas(
+    queries: jax.Array, points: jax.Array, labels: jax.Array,
+    valid: jax.Array | None = None,
+    *, k: int, tq: int = 128, tn: int = 512, interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """[Q,D] x [N,D] (+[N] labels) -> ([Q,k], [Q,k]) nearest (dist, label)."""
+    q0 = queries.shape[0]
+    q = pad_to_multiple(pad_to_multiple(queries, 128, 1), tq, 0)
+    p = pad_to_multiple(pad_to_multiple(points, 128, 1), tn, 0)
+    if valid is None:
+        valid = jnp.ones((points.shape[0],), jnp.int32)
+    v = pad_to_multiple(valid.astype(jnp.int32), tn, 0)[None, :]
+    lab = pad_to_multiple(labels.astype(jnp.int32), tn, 0)[None, :]
+    qq, d = q.shape
+    nn = p.shape[0]
+
+    out_d, out_l = pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=(qq // tq, nn // tn),
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tq, k), lambda i, j: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((qq, k), jnp.float32),
+            jax.ShapeDtypeStruct((qq, k), jnp.int32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((tq, k), jnp.float32),
+            pltpu.VMEM((tq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, p, lab, v)
+    return out_d[:q0], out_l[:q0]

@@ -7,16 +7,33 @@ Dispatch policy:
     interpret mode against the same reference).
 
 ``force`` lets tests pin a path: "pallas_interpret" runs the real kernel
-body under the Pallas interpreter on CPU.
+body under the Pallas interpreter on CPU.  The ``REPRO_FORCE_KERNELS``
+environment variable (read once at import: ``ref`` or ``pallas_interpret``)
+sets the default for every call that doesn't pass ``force`` explicitly, so
+CI on CPU can exercise the real kernel bodies without threading ``force=``
+through every call site.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+
+_FORCE_CHOICES = (None, "ref", "pallas_interpret")
+_FORCE_DEFAULT = os.environ.get("REPRO_FORCE_KERNELS") or None
+if _FORCE_DEFAULT not in _FORCE_CHOICES:
+    raise ValueError(
+        f"REPRO_FORCE_KERNELS={_FORCE_DEFAULT!r}: expected one of "
+        f"{_FORCE_CHOICES[1:]}"
+    )
+
+
+def _resolve(force: str | None) -> str | None:
+    return force if force is not None else _FORCE_DEFAULT
 
 
 def _on_tpu() -> bool:
@@ -31,6 +48,7 @@ def knn_distance(
     queries: jax.Array, points: jax.Array, *, force: str | None = None
 ) -> jax.Array:
     """Squared-L2 distance matrix [Q,N]; MXU-tiled Pallas kernel on TPU."""
+    force = _resolve(force)
     if force == "ref":
         return ref.knn_distance(queries, points)
     if force == "pallas_interpret" or _on_tpu():
@@ -47,6 +65,7 @@ def lsh_hash(
     *, force: str | None = None,
 ) -> jax.Array:
     """Fused projection+floor p-stable hash, [N,H] int32."""
+    force = _resolve(force)
     if force == "ref":
         return ref.lsh_hash(data, a, b, width)
     if force == "pallas_interpret" or _on_tpu():
@@ -64,6 +83,7 @@ def cf_weights(
     *, force: str | None = None,
 ) -> jax.Array:
     """Masked Pearson weight matrix [Q,U]."""
+    force = _resolve(force)
     if force == "ref":
         return ref.cf_weights(active, active_mask, users, users_mask)
     if force == "pallas_interpret" or _on_tpu():
@@ -81,6 +101,7 @@ def aggregated_attention_decode(
     *, scale: float, valid_len=None, force: str | None = None,
 ):
     """Two-stage (centroid + refined-bucket) decode attention, [H,d]."""
+    force = _resolve(force)
     if force == "ref":
         return ref.aggregated_attention_decode(
             q, k_cache, v_cache, bucket_of, mean_k, mean_v, counts,
@@ -96,4 +117,98 @@ def aggregated_attention_decode(
     return ref.aggregated_attention_decode(
         q, k_cache, v_cache, bucket_of, mean_k, mean_v, counts, refined,
         scale, valid_len,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused two-stage hot-path kernels (streaming top-k + gather-free refine)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "force"))
+def distance_topk(
+    queries: jax.Array, points: jax.Array, labels: jax.Array,
+    valid: jax.Array | None = None,
+    *, k: int, force: str | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused squared-L2 + streaming top-k: -> ([Q,k] dists, [Q,k] labels).
+
+    The [Q,N] distance matrix never reaches HBM on the kernel path; the
+    running k-best lives in VMEM scratch across point tiles.
+    """
+    force = _resolve(force)
+    if force == "ref":
+        return ref.distance_topk(queries, points, labels, valid, k=k)
+    if force == "pallas_interpret" or _on_tpu():
+        from repro.kernels import distance_topk as dk
+        return dk.distance_topk_pallas(
+            queries, points, labels, valid, k=k,
+            interpret=force == "pallas_interpret",
+        )
+    return ref.distance_topk(queries, points, labels, valid, k=k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "force"))
+def candidate_topk(
+    dists: jax.Array, labels: jax.Array,
+    init_d: jax.Array | None = None, init_l: jax.Array | None = None,
+    *, k: int, force: str | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming top-k over precomputed [Q,M] candidates, optionally seeded
+    with a previous [Q,k] running best (the fused stage-2 finalize and the
+    pairwise shard merge both chain selections through this seed)."""
+    force = _resolve(force)
+    if force == "ref":
+        return ref.candidate_topk(dists, labels, init_d, init_l, k=k)
+    if force == "pallas_interpret" or _on_tpu():
+        from repro.kernels import topk_stream as ts
+        if init_d is None:
+            init_d = jnp.full(dists.shape[:1] + (k,), ts.BIG, jnp.float32)
+            init_l = jnp.zeros(dists.shape[:1] + (k,), jnp.int32)
+        return ts.candidate_topk_pallas(
+            dists, labels, init_d, init_l, k=k,
+            interpret=force == "pallas_interpret",
+        )
+    return ref.candidate_topk(dists, labels, init_d, init_l, k=k)
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def refine_distances(
+    queries: jax.Array, train_x: jax.Array,
+    idx: jax.Array, valid: jax.Array,
+    *, force: str | None = None,
+) -> jax.Array:
+    """Gather-free stage-2 exact distances: [Q,B] with BIG-masked padding."""
+    force = _resolve(force)
+    if force == "ref":
+        return ref.refine_distances(queries, train_x, idx, valid)
+    if force == "pallas_interpret" or _on_tpu():
+        from repro.kernels import refine_distances as rd
+        return rd.refine_distances_pallas(
+            queries, train_x, idx, valid,
+            interpret=force == "pallas_interpret",
+        )
+    return ref.refine_distances(queries, train_x, idx, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("shrink", "force"))
+def cf_refine(
+    active: jax.Array, active_mask: jax.Array,
+    ratings: jax.Array, mask: jax.Array,
+    idx: jax.Array, use: jax.Array,
+    *, shrink: float, force: str | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Gather-free CF refinement: (w_ref [Q,B], num_delta, den_delta)."""
+    force = _resolve(force)
+    if force == "ref":
+        return ref.cf_refine(
+            active, active_mask, ratings, mask, idx, use, shrink=shrink
+        )
+    if force == "pallas_interpret" or _on_tpu():
+        from repro.kernels import cf_refine as cr
+        return cr.cf_refine_pallas(
+            active, active_mask, ratings, mask, idx, use, shrink=shrink,
+            interpret=force == "pallas_interpret",
+        )
+    return ref.cf_refine(
+        active, active_mask, ratings, mask, idx, use, shrink=shrink
     )

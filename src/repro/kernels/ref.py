@@ -10,6 +10,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.topk_stream import BIG
+
+
+def _pad_candidates(dists: jax.Array, labels: jax.Array, k: int):
+    """Pad the candidate axis to >= k with the BIG sentinel so selections
+    over fewer than k candidates return BIG-padded slots (the kernels get
+    this for free from tile padding; `lax.top_k` would raise)."""
+    short = k - dists.shape[-1]
+    if short > 0:
+        dists = jnp.pad(dists, ((0, 0), (0, short)), constant_values=BIG)
+        labels = jnp.pad(labels, ((0, 0), (0, short)))
+    return dists, labels
+
 
 def knn_distance(queries: jax.Array, points: jax.Array) -> jax.Array:
     """Squared L2 distance matrix. [Q,D],[N,D] -> [Q,N] float32.
@@ -23,6 +36,107 @@ def knn_distance(queries: jax.Array, points: jax.Array) -> jax.Array:
     p2 = jnp.sum(p * p, axis=-1, keepdims=True).T      # [1,N]
     cross = q @ p.T                                    # [Q,N]
     return jnp.maximum(q2 - 2.0 * cross + p2, 0.0)
+
+
+def candidate_topk(
+    dists: jax.Array, labels: jax.Array,
+    init_d: jax.Array | None = None, init_l: jax.Array | None = None,
+    *, k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-query k smallest (distance, label) pairs from [Q, M] candidates.
+
+    ``init_d``/``init_l`` [Q, k] seed the selection (a previously merged
+    running best); seeding-then-selecting equals one selection over the
+    concatenation because both orders are the k smallest under the same
+    (value, position) tie-break — the contract the fused stage-2 finalize
+    relies on.
+    """
+    if init_d is not None:
+        dists = jnp.concatenate([init_d, dists], axis=1)
+        labels = jnp.concatenate([init_l, labels], axis=1)
+    dists, labels = _pad_candidates(dists, labels, k)
+    neg, idx = jax.lax.top_k(-dists.astype(jnp.float32), k)
+    return -neg, jnp.take_along_axis(labels, idx, axis=-1).astype(jnp.int32)
+
+
+def distance_topk(
+    queries: jax.Array, points: jax.Array, labels: jax.Array,
+    valid: jax.Array | None = None, *, k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused distance + top-k oracle: [Q,D],[N,D],[N] -> ([Q,k], [Q,k]).
+
+    Semantically `knn_distance` then `top_k`; the Pallas kernel never
+    materializes the [Q, N] intermediate.  ``valid`` masks points (padding,
+    empty buckets) out with the BIG sentinel.
+    """
+    d = knn_distance(queries, points)
+    if valid is not None:
+        d = jnp.where(valid[None, :], d, BIG)
+    lab = jnp.broadcast_to(labels[None, :].astype(jnp.int32), d.shape)
+    d, lab = _pad_candidates(d, lab, k)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, jnp.take_along_axis(lab, idx, axis=-1)
+
+
+def refine_distances(
+    queries: jax.Array, train_x: jax.Array,
+    idx: jax.Array, valid: jax.Array,
+) -> jax.Array:
+    """Per-query exact distances to selected originals, BIG-masked padding.
+
+    [Q,D],[N,D],[Q,B],[Q,B] -> [Q,B].  The oracle gathers [Q,B,D]; the
+    Pallas kernel reads each selected row straight from HBM instead.
+    """
+    qf = queries.astype(jnp.float32)
+    ref_x = train_x.astype(jnp.float32)[idx]                # [Q, B, D]
+    q2 = jnp.sum(qf * qf, axis=-1)                          # [Q]
+    x2 = jnp.sum(ref_x * ref_x, axis=-1)                    # [Q, B]
+    cross = jnp.einsum("qd,qbd->qb", qf, ref_x)
+    d = jnp.maximum(q2[:, None] - 2.0 * cross + x2, 0.0)
+    return jnp.where(valid, d, BIG)
+
+
+def cf_refine(
+    active: jax.Array, active_mask: jax.Array,
+    ratings: jax.Array, mask: jax.Array,
+    idx: jax.Array, use: jax.Array,
+    *, shrink: float,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """CF stage-2 refinement oracle (the original einsum formulation).
+
+    Returns (w_ref [Q,B], num_delta [Q,I], den_delta [Q,I]): shrunk Pearson
+    weights of each query against its selected candidate users, and the
+    weighted neighbourhood sums those candidates contribute.  ``use`` gates
+    candidates (selection padding / partially covered buckets) to zero.
+    """
+    centred_all = (ratings - _user_means(ratings, mask)) * mask
+    ref_m = mask[idx] * use[..., None]                      # [Q, B, I]
+    ref_c = centred_all[idx] * use[..., None]
+
+    af = active.astype(jnp.float32)
+    am = active_mask.astype(jnp.float32)
+    a_mean = jnp.sum(af * am, axis=1, keepdims=True) / jnp.maximum(
+        jnp.sum(am, axis=1, keepdims=True), 1.0
+    )
+    ac = (af - a_mean) * am                                 # [Q, I]
+
+    w_num = jnp.einsum("qi,qbi->qb", ac, ref_c)
+    a_sq = jnp.einsum("qi,qbi->qb", ac * ac, ref_m)
+    u_sq = jnp.einsum("qi,qbi->qb", am, ref_c * ref_c)
+    w_ref = w_num / jnp.sqrt(jnp.maximum(a_sq * u_sq, 1e-12))
+    co_ref = jnp.einsum("qi,qbi->qb", am, ref_m)
+    w_ref = w_ref * (co_ref / (co_ref + shrink))
+    w_ref = jnp.where(use, w_ref, 0.0)                      # [Q, B]
+
+    num_delta = jnp.einsum("qb,qbi->qi", w_ref, ref_c)
+    den_delta = jnp.einsum("qb,qbi->qi", jnp.abs(w_ref), ref_m)
+    return w_ref, num_delta, den_delta
+
+
+def _user_means(ratings: jax.Array, mask: jax.Array) -> jax.Array:
+    return jnp.sum(ratings * mask, axis=1, keepdims=True) / jnp.maximum(
+        jnp.sum(mask, axis=1, keepdims=True), 1.0
+    )
 
 
 def lsh_hash(

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: gather-free stage-2 exact distances (kNN refinement).
+
+`accurateml_map` stage 2 used to materialize the gathered originals
+``train_x[idx]`` as a [Q, B, D] tensor before a batched einsum — B·D bytes
+of duplicated HBM traffic per query.  Here the per-query refinement
+selection (`RefinementSelection.point_idx`) is a *scalar-prefetch* operand
+(`PrefetchScalarGridSpec`): the BlockSpec index map reads ``idx[q, b]`` and
+DMAs that single row of ``train_x`` straight from HBM into VMEM, so each
+selected original is read exactly once and the gathered tensor never
+exists.
+
+Padded selection slots (``valid == 0``) emit the BIG sentinel, never a real
+distance — index 0's row is fetched (refinement_indices pads with 0) but
+its distance is discarded in-kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.topk_stream import BIG, pad_to_multiple
+
+
+def _kernel(idx_ref, valid_ref, q_ref, x_ref, out_ref):
+    del idx_ref
+    qi = pl.program_id(0)
+    bi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)              # [1, D]
+    x = x_ref[...].astype(jnp.float32)              # [1, D]
+    q2 = jnp.sum(q * q)
+    x2 = jnp.sum(x * x)
+    cross = jnp.sum(q * x)
+    d = jnp.maximum(q2 - 2.0 * cross + x2, 0.0)
+    out_ref[0, 0] = jnp.where(valid_ref[qi, bi] != 0, d, BIG)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def refine_distances_pallas(
+    queries: jax.Array, train_x: jax.Array,
+    idx: jax.Array, valid: jax.Array,
+    *, interpret: bool = False,
+) -> jax.Array:
+    """[Q,D] queries, [N,D] originals, [Q,B] selection -> [Q,B] distances."""
+    q = pad_to_multiple(queries, 128, 1)
+    x = pad_to_multiple(train_x, 128, 1)
+    nq, d = q.shape
+    nb = idx.shape[1]
+    idx32 = jnp.clip(idx.astype(jnp.int32), 0, train_x.shape[0] - 1)
+    val32 = valid.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nq, nb),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda qi, bi, idx_ref, val_ref: (qi, 0)),
+            pl.BlockSpec(
+                (1, d), lambda qi, bi, idx_ref, val_ref: (idx_ref[qi, bi], 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda qi, bi, *_: (qi, bi)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nq, nb), jnp.float32),
+        interpret=interpret,
+    )(idx32, val32, q, x)

@@ -1,0 +1,141 @@
+"""Streaming running-k-best: the shared scratch-carried top-k machinery.
+
+This is the repo's first kernel pattern that carries *state across grid
+steps*: a [TQ, k] running k-best (distances + labels) lives in VMEM scratch
+while candidate tiles stream through, so the full [Q, M] candidate matrix is
+consumed tile-by-tile and never needs a second HBM pass for the selection
+(`jax.lax.top_k` over a materialized matrix is exactly that second pass).
+
+Mosaic has no sort/top_k primitive, so the per-tile merge is k rounds of
+(min, first-argmin select, mask-out) — k is small (the kNN `k`), each round
+is one VPU reduction over [TQ, k + TC].  Tie-breaking is by lowest original
+column index (the running best sits in the low columns and earlier tiles
+have lower indices), which is bit-compatible with `jax.lax.top_k(-d)`.
+
+Padded candidates must arrive as the BIG sentinel (never zero): zero is a
+*perfect* distance and would win every merge.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# numpy scalars on purpose: device-array constants would be captured as
+# implicit operands by pallas kernel bodies.
+BIG = np.float32(3.0e38)
+_HUGE_COL = np.int32(2**30)
+
+
+def merge_kbest(
+    best_d: jax.Array, best_l: jax.Array,
+    cand_d: jax.Array, cand_l: jax.Array, k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Merge [TQ, TC] candidates into a sorted [TQ, k] running best.
+
+    Pure jnp (VPU ops only) so it runs inside kernel bodies and oracles
+    alike.  ``best`` columns sit before ``cand`` columns, so on distance
+    ties the incumbent (earlier original index) wins — `lax.top_k`
+    semantics.
+    """
+    d = jnp.concatenate([best_d, cand_d], axis=1)        # [TQ, k+TC]
+    lab = jnp.concatenate([best_l, cand_l], axis=1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    out_d, out_l = [], []
+    for _ in range(k):
+        m = jnp.min(d, axis=1, keepdims=True)            # [TQ, 1]
+        first = jnp.min(
+            jnp.where(d == m, cols, _HUGE_COL), axis=1, keepdims=True
+        )
+        sel = cols == first
+        out_d.append(m)
+        out_l.append(jnp.sum(jnp.where(sel, lab, 0), axis=1, keepdims=True))
+        d = jnp.where(sel, BIG, d)
+    return jnp.concatenate(out_d, axis=1), jnp.concatenate(out_l, axis=1)
+
+
+def _kernel(d_ref, l_ref, init_d_ref, init_l_ref, out_d_ref, out_l_ref,
+            best_d, best_l, *, k):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        best_d[...] = init_d_ref[...]
+        best_l[...] = init_l_ref[...]
+
+    nd, nl = merge_kbest(
+        best_d[...], best_l[...], d_ref[...], l_ref[...], k
+    )
+    best_d[...] = nd
+    best_l[...] = nl
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        out_d_ref[...] = best_d[...]
+        out_l_ref[...] = best_l[...]
+
+
+def pad_to_multiple(x, mult, axis, value=0):
+    """Zero/value-pad ``axis`` up to a multiple of ``mult`` (shared by every
+    kernel wrapper in this package; pad distances with BIG, never zero)."""
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "tq", "tc", "interpret")
+)
+def candidate_topk_pallas(
+    dists: jax.Array, labels: jax.Array,
+    init_d: jax.Array, init_l: jax.Array,
+    *, k: int, tq: int = 128, tc: int = 512, interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """[Q,M] candidate (distance, label) pairs -> [Q,k] best, streamed.
+
+    ``init_d``/``init_l`` [Q,k] seed the running best (BIG/0 for a fresh
+    selection), which is how the stage-2 finalize chains centroid and
+    refined candidates through one scratch without a concatenate.
+    """
+    q0 = dists.shape[0]
+    d = pad_to_multiple(
+        pad_to_multiple(dists, tc, 1, value=BIG), tq, 0, value=BIG
+    )
+    lab = pad_to_multiple(
+        pad_to_multiple(labels, tc, 1), tq, 0
+    ).astype(jnp.int32)
+    idd = pad_to_multiple(init_d.astype(jnp.float32), tq, 0, value=BIG)
+    idl = pad_to_multiple(init_l, tq, 0).astype(jnp.int32)
+    qq, mm = d.shape
+
+    out_d, out_l = pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=(qq // tq, mm // tc),
+        in_specs=[
+            pl.BlockSpec((tq, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((tq, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((tq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tq, k), lambda i, j: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tq, k), lambda i, j: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((qq, k), jnp.float32),
+            jax.ShapeDtypeStruct((qq, k), jnp.int32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((tq, k), jnp.float32),
+            pltpu.VMEM((tq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(d.astype(jnp.float32), lab, idd, idl)
+    return out_d[:q0], out_l[:q0]

@@ -1,0 +1,151 @@
+"""Integration tests for the fused two-stage hot path.
+
+The fused kernels may change *how* the hot loop moves bytes but never
+*what* it computes: `accurateml_map` must be bit-identical to the unfused
+materialize-then-reduce composition it replaced, and the pairwise shard
+merge must equal the flattened top_k it replaced.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import knn
+from repro.core import aggregate as agg_lib
+from repro.core import correlation as corr_lib
+from repro.core import lsh as lsh_lib
+from repro.kernels import ops as kernel_ops
+
+
+def _unfused_accurateml_map(train_x, train_y, knn_agg, test_x, *, k,
+                            refine_budget):
+    """The pre-fusion Algorithm-1 map task: materialized [Q,K] distances,
+    [Q,B,D] gathered originals, concatenate + top_k tail."""
+    agg = knn_agg.agg
+    d_cent = kernel_ops.knn_distance(test_x, agg.means)
+    d_cent = jnp.where(agg.counts[None, :] > 0, d_cent, knn.BIG)
+    if refine_budget <= 0:
+        return knn.local_topk(d_cent, knn_agg.bucket_labels, k)
+    corr = -d_cent
+    rankings = corr_lib.rank_buckets_multi(corr, agg.counts)
+    idx, valid = jax.vmap(
+        lambda r: agg_lib.refinement_indices(agg, r, refine_budget)
+    )(rankings)
+    covered = jax.vmap(
+        lambda r: agg_lib.buckets_fully_covered(agg, r, refine_budget)
+    )(rankings)
+    covered = covered & (agg.counts[None, :] > 0)
+
+    ref_x = train_x[idx]
+    ref_y = train_y[idx]
+    q2 = jnp.sum(test_x.astype(jnp.float32) ** 2, axis=-1)
+    x2 = jnp.sum(ref_x.astype(jnp.float32) ** 2, axis=-1)
+    cross = jnp.einsum(
+        "qd,qbd->qb", test_x.astype(jnp.float32), ref_x.astype(jnp.float32)
+    )
+    d_ref = jnp.maximum(q2[:, None] - 2.0 * cross + x2, 0.0)
+    d_ref = jnp.where(valid, d_ref, knn.BIG)
+    d_cent_masked = jnp.where(covered, knn.BIG, d_cent)
+
+    cand_d = jnp.concatenate([d_cent_masked, d_ref], axis=1)
+    cand_l = jnp.concatenate(
+        [jnp.broadcast_to(knn_agg.bucket_labels[None, :], d_cent.shape),
+         ref_y], axis=1,
+    )
+    return knn.local_topk(cand_d, cand_l, k)
+
+
+def _knn_fixture(seed=0, n=600, d=12, q=40, n_classes=6):
+    key = jax.random.PRNGKey(seed)
+    tx = jax.random.normal(key, (n, d))
+    ty = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, n_classes)
+    qx = jax.random.normal(jax.random.fold_in(key, 2), (q, d))
+    cfg = lsh_lib.config_for_compression(n, 12.0, n_hashes=4,
+                                         bucket_width=4.0)
+    params = lsh_lib.init_lsh(jax.random.PRNGKey(9), d, cfg)
+    knn_agg = knn.build_knn_aggregates(tx, ty, params, n_classes)
+    return tx, ty, knn_agg, qx
+
+
+@pytest.mark.parametrize("budget", [0, 37, 150])
+def test_accurateml_map_bit_identical_to_unfused(budget):
+    """Acceptance gate: fused end-to-end output == unfused path, bitwise.
+
+    Both sides run under jit (the unfused map task always was a single jit
+    program); comparing against an eager op-by-op replay instead would
+    measure XLA fusion-context ULP noise, not the fusion rewrite.
+    """
+    from functools import partial
+
+    tx, ty, knn_agg, qx = _knn_fixture()
+    got_d, got_l = knn.accurateml_map(
+        tx, ty, knn_agg, qx, k=5, refine_budget=budget
+    )
+    want_d, want_l = jax.jit(
+        partial(_unfused_accurateml_map, k=5, refine_budget=budget)
+    )(tx, ty, knn_agg, qx)
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+    np.testing.assert_array_equal(np.asarray(got_l), np.asarray(want_l))
+
+
+def test_exact_map_bit_identical_to_unfused():
+    tx, ty, _, qx = _knn_fixture(seed=4)
+    got_d, got_l = knn.exact_map(tx, ty, qx, k=7)
+    d = kernel_ops.knn_distance(qx, tx)
+    want_d, want_l = knn.local_topk(d, ty, 7)
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+    np.testing.assert_array_equal(np.asarray(got_l), np.asarray(want_l))
+
+
+def test_merge_topk_pairwise_equals_flattened():
+    """Pairwise shard folding == the [Q, S*k] moveaxis/reshape + top_k."""
+    key = jax.random.PRNGKey(3)
+    s, q, k = 5, 17, 6
+    d = jnp.sort(jax.random.uniform(key, (s, q, k)) * 100.0, axis=-1)
+    l = jax.random.randint(jax.random.fold_in(key, 1), (s, q, k), 0, 9)
+    got_d, got_l = knn.merge_topk(d, l, k)
+    flat_d = jnp.moveaxis(d, 0, 1).reshape(q, s * k)
+    flat_l = jnp.moveaxis(l, 0, 1).reshape(q, s * k)
+    want_d, want_l = knn.local_topk(flat_d, flat_l, k)
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+    np.testing.assert_array_equal(np.asarray(got_l), np.asarray(want_l))
+
+
+def test_merge_topk_single_shard():
+    key = jax.random.PRNGKey(8)
+    d = jnp.sort(jax.random.uniform(key, (1, 9, 4)) * 10.0, axis=-1)
+    l = jax.random.randint(jax.random.fold_in(key, 1), (1, 9, 4), 0, 5)
+    got_d, got_l = knn.merge_topk(d, l, 4)
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(d[0]))
+    np.testing.assert_array_equal(np.asarray(got_l), np.asarray(l[0]))
+
+
+def test_force_kernels_env_subprocess():
+    """REPRO_FORCE_KERNELS=pallas_interpret routes every call site through
+    the real kernel bodies with no force= threading (import-time read)."""
+    script = Path(__file__).parent / "_subproc" / "force_kernels_check.py"
+    r = subprocess.run(
+        [sys.executable, str(script)], capture_output=True, text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "ALL_OK" in r.stdout, r.stdout
+
+
+def test_force_kernels_env_rejects_garbage():
+    import os
+    import subprocess as sp
+
+    env = dict(os.environ, REPRO_FORCE_KERNELS="warp_speed",
+               PYTHONPATH="src")
+    r = sp.run(
+        [sys.executable, "-c", "import repro.kernels.ops"],
+        capture_output=True, text=True, timeout=300,
+        cwd=Path(__file__).resolve().parents[1], env=env,
+    )
+    assert r.returncode != 0
+    assert "REPRO_FORCE_KERNELS" in r.stderr

@@ -5,11 +5,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container has no hypothesis; deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
 from repro.kernels import ref
 from repro.kernels.aggregated_attention import aggregated_attention_pallas
+from repro.kernels.cf_refine import cf_refine_pallas
 from repro.kernels.cf_weights import cf_weights_pallas
+from repro.kernels.distance_topk import distance_topk_pallas
 from repro.kernels.knn_distance import knn_distance_pallas
 from repro.kernels.lsh_hash import lsh_hash_pallas
+from repro.kernels.refine_distances import refine_distances_pallas
+from repro.kernels.topk_stream import BIG, candidate_topk_pallas
 
 
 @pytest.mark.parametrize("q,n,d", [
@@ -169,3 +178,181 @@ def test_aggregated_attention_quality_clustered():
         jnp.linalg.norm(approx, axis=-1) * jnp.linalg.norm(exact, axis=-1)
     )
     assert float(jnp.min(cos)) > 0.98, np.asarray(cos)
+
+
+# ---------------------------------------------------------------------------
+# fused two-stage hot path: streaming distance+top-k + gather-free refine
+# ---------------------------------------------------------------------------
+
+def _topk_case(seed, q, n, d, valid_frac=0.8):
+    key = jax.random.PRNGKey(seed)
+    qs = jax.random.normal(key, (q, d))
+    ps = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    labs = jax.random.randint(jax.random.fold_in(key, 2), (n,), 0, 11)
+    valid = jax.random.uniform(jax.random.fold_in(key, 3), (n,)) < valid_frac
+    return qs, ps, labs, valid
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    q=st.integers(min_value=1, max_value=70),
+    n=st.integers(min_value=1, max_value=300),
+    d=st.integers(min_value=1, max_value=140),
+    k=st.integers(min_value=1, max_value=8),
+)
+def test_distance_topk_property(q, n, d, k):
+    """Interpret-mode kernel == oracle over arbitrary (non-tile-multiple)
+    Q/N/D/k, including n < k (selection pads with BIG)."""
+    qs, ps, labs, valid = _topk_case(q * 7919 + n * 31 + d, q, n, d)
+    got_d, got_l = distance_topk_pallas(
+        qs, ps, labs, valid, k=k, tq=64, tn=64, interpret=True
+    )
+    want_d, want_l = ref.distance_topk(qs, ps, labs, valid, k=k)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-4, atol=1e-4)
+    real = np.asarray(want_d) < float(BIG) / 2  # label ties only matter on
+    np.testing.assert_array_equal(             # real (finite) selections
+        np.asarray(got_l)[real], np.asarray(want_l)[real]
+    )
+
+
+def test_distance_topk_padding_never_selected():
+    """BIG sentinel, not zero padding: a masked-out point *identical to the
+    query* (squared distance exactly 0 — the best possible candidate under
+    zero padding) must never enter the top-k."""
+    key = jax.random.PRNGKey(5)
+    qs = jax.random.normal(key, (6, 10))
+    far = jax.random.normal(jax.random.fold_in(key, 1), (50, 10)) + 30.0
+    pts = jnp.concatenate([far, qs], axis=0)     # last 6 rows: exact copies
+    labs = jnp.concatenate([jnp.zeros((50,), jnp.int32),
+                            jnp.ones((6,), jnp.int32)])
+    valid = jnp.concatenate([jnp.ones((50,), bool), jnp.zeros((6,), bool)])
+    got_d, got_l = distance_topk_pallas(
+        qs, pts, labs, valid, k=4, tq=64, tn=64, interpret=True
+    )
+    assert (np.asarray(got_l) == 0).all()        # only far (valid) points
+    assert (np.asarray(got_d) > 1.0).all()
+
+
+def test_distance_topk_all_padding():
+    """Every point masked out -> all selections are the BIG sentinel (the
+    all-empty-buckets stage-1 case); majority_vote treats them as invalid."""
+    qs, ps, labs, _ = _topk_case(3, 5, 40, 12)
+    none = jnp.zeros((40,), bool)
+    got_d, got_l = distance_topk_pallas(
+        qs, ps, labs, none, k=3, tq=64, tn=64, interpret=True
+    )
+    assert (np.asarray(got_d) >= float(BIG) / 2).all()
+    want_d, _ = ref.distance_topk(qs, ps, labs, none, k=3)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    q=st.integers(min_value=1, max_value=40),
+    m=st.integers(min_value=1, max_value=200),
+    k=st.integers(min_value=1, max_value=8),
+)
+def test_candidate_topk_seeded_property(q, m, k):
+    """Seeded streaming selection == one top_k over the concatenation."""
+    key = jax.random.PRNGKey(q * 1009 + m)
+    d = jax.random.uniform(key, (q, m)) * 10.0
+    d = jnp.where(jax.random.uniform(jax.random.fold_in(key, 1), (q, m)) < 0.9,
+                  d, BIG)                        # some pre-masked candidates
+    lab = jax.random.randint(jax.random.fold_in(key, 2), (q, m), 0, 7)
+    init_d = jnp.sort(jax.random.uniform(jax.random.fold_in(key, 3),
+                                         (q, k)) * 10.0, axis=1)
+    init_l = jax.random.randint(jax.random.fold_in(key, 4), (q, k), 0, 7)
+    got_d, got_l = candidate_topk_pallas(
+        d, lab, init_d, init_l, k=k, tq=64, tc=64, interpret=True
+    )
+    want_d, want_l = ref.candidate_topk(d, lab, init_d, init_l, k=k)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-6, atol=1e-6)
+    real = np.asarray(want_d) < float(BIG) / 2
+    np.testing.assert_array_equal(
+        np.asarray(got_l)[real], np.asarray(want_l)[real]
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    q=st.integers(min_value=1, max_value=30),
+    n=st.integers(min_value=1, max_value=120),
+    d=st.integers(min_value=1, max_value=200),
+    b=st.integers(min_value=1, max_value=40),
+)
+def test_refine_distances_property(q, n, d, b):
+    """Scalar-prefetch gather-free distances == gathered-einsum oracle,
+    including all-padding selections (valid everywhere False)."""
+    key = jax.random.PRNGKey(q + n * 13 + d * 101 + b)
+    qs = jax.random.normal(key, (q, d))
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    idx = jax.random.randint(jax.random.fold_in(key, 2), (q, b), 0, n)
+    valid = jax.random.uniform(jax.random.fold_in(key, 3), (q, b)) < 0.7
+    got = refine_distances_pallas(qs, xs, idx, valid, interpret=True)
+    want = ref.refine_distances(qs, xs, idx, valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # all-padding bucket: every slot masked -> pure BIG row
+    none = jnp.zeros_like(valid)
+    got0 = refine_distances_pallas(qs, xs, idx, none, interpret=True)
+    assert (np.asarray(got0) >= float(BIG) / 2).all()
+
+
+@pytest.mark.parametrize("qn,un,ni,b", [(4, 30, 25, 7), (9, 64, 130, 17)])
+def test_cf_refine_kernel(qn, un, ni, b):
+    key = jax.random.PRNGKey(qn * 100 + b)
+    r = jax.random.randint(key, (qn + un, ni), 0, 6).astype(jnp.float32)
+    m = (jax.random.uniform(jax.random.fold_in(key, 1), (qn + un, ni)) < 0.3
+         ).astype(jnp.float32)
+    a, am = (r * m)[:qn], m[:qn]
+    u, um = (r * m)[qn:], m[qn:]
+    idx = jax.random.randint(jax.random.fold_in(key, 2), (qn, b), 0, un)
+    use = jax.random.uniform(jax.random.fold_in(key, 3), (qn, b)) < 0.6
+    got = cf_refine_pallas(a, am, u, um, idx, use, shrink=8.0,
+                           interpret=True)
+    want = ref.cf_refine(a, am, u, um, idx, use, shrink=8.0)
+    for g, w, name in zip(got, want, ("w_ref", "num_delta", "den_delta")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-4, atol=2e-4, err_msg=name)
+
+
+def test_cf_refine_all_padding_is_zero():
+    """No used candidate -> zero weights and zero contribution (not NaN)."""
+    key = jax.random.PRNGKey(11)
+    r = jax.random.randint(key, (20, 15), 0, 6).astype(jnp.float32)
+    m = (jax.random.uniform(jax.random.fold_in(key, 1), (20, 15)) < 0.4
+         ).astype(jnp.float32)
+    idx = jax.random.randint(jax.random.fold_in(key, 2), (3, 5), 0, 15)
+    use = jnp.zeros((3, 5), bool)
+    w, num, den = cf_refine_pallas(
+        (r * m)[:3], m[:3], (r * m)[5:], m[5:], idx, use, shrink=8.0,
+        interpret=True,
+    )
+    assert np.isfinite(np.asarray(w)).all()
+    assert (np.asarray(w) == 0).all()
+    assert (np.asarray(num) == 0).all() and (np.asarray(den) == 0).all()
+
+
+def test_topk_fewer_candidates_than_k():
+    """n < k: both oracle and kernel pad the selection with BIG instead of
+    raising (lax.top_k alone would)."""
+    qs, ps, labs, _ = _topk_case(1, 4, 3, 9)
+    got_d, got_l = distance_topk_pallas(
+        qs, ps, labs, None, k=5, tq=64, tn=64, interpret=True
+    )
+    want_d, want_l = ref.distance_topk(qs, ps, labs, None, k=5)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-5, atol=1e-5)
+    assert (np.asarray(want_d)[:, 3:] >= float(BIG) / 2).all()
+    real = np.asarray(want_d) < float(BIG) / 2
+    np.testing.assert_array_equal(
+        np.asarray(got_l)[real], np.asarray(want_l)[real]
+    )
+    # unseeded candidate selection over a too-narrow candidate set
+    cd = jnp.asarray([[1.0, 2.0]])
+    cl = jnp.asarray([[4, 6]], dtype=jnp.int32)
+    d2, l2 = ref.candidate_topk(cd, cl, k=4)
+    np.testing.assert_allclose(np.asarray(d2)[0, :2], [1.0, 2.0])
+    assert (np.asarray(d2)[0, 2:] >= float(BIG) / 2).all()
