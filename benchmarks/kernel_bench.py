@@ -183,7 +183,16 @@ def _check_bit_identity() -> bool:
 
 
 def run():
-    rows = [_bench_n(n) for n in NS]
+    # Measured-time channel: the obs kernel probe times every host-level
+    # dispatch around block_until_ready, so the summary carries a measured
+    # p50 per (op, path) next to the modeled HBM bytes.
+    from repro.obs.probes import install_kernel_probe, uninstall_kernel_probe
+
+    probe = install_kernel_probe()
+    try:
+        rows = [_bench_n(n) for n in NS]
+    finally:
+        uninstall_kernel_probe()
     for r in rows:
         for stage in ("stage1", "stage2"):
             s = r[stage]
@@ -216,6 +225,7 @@ def run():
         "gate_n": gate["n"],
         "stage1_bytes_reduction": gate["stage1"]["bytes_reduction"],
         "stage2_bytes_reduction": gate["stage2"]["bytes_reduction"],
+        "measured": probe.summary(),
     }
     if not TINY:  # smoke runs must not clobber the committed trajectory
         OUT_JSON.write_text(json.dumps(summary, indent=2) + "\n")

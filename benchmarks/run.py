@@ -63,6 +63,12 @@ def main() -> None:
     finally:
         sys.stdout, sys.stderr = out.inner, err.inner
 
+    # Process-wide metrics registry (kernel-probe measured p50s, runtime
+    # shard events) snapshots into the combined line: per-kernel measured
+    # time and serving accuracy proxies travel with every perf data point.
+    from repro.obs.metrics import default_registry
+
+    combined["obs"] = default_registry().snapshot()
     print("BENCH " + json.dumps(combined))
     if not ok or out.saw_fail or err.saw_fail:
         sys.exit(1)

@@ -50,6 +50,9 @@ def run():
                 wave(kind, deadline_s, offset=8 + w * BATCH)
 
     summary = server.summary()
+    # Full registry snapshot (labeled latency/eps/accuracy-proxy series,
+    # cache-source counters) rides along for the BENCH trajectory.
+    summary["obs"] = server.metrics.snapshot()
     print("BENCH " + json.dumps({"serve_latency": summary}))
     emit(
         "serve_latency_stage1_p50", summary["stage1_latency_ms"]["p50"] * 1e3,

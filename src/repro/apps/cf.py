@@ -377,6 +377,18 @@ class CFServable(serve_servable.LSHServableBase):
     def unpack(self, outputs: jax.Array, n: int) -> list:
         return list(np.asarray(outputs[:n]))
 
+    def accuracy_proxy(self, stage1_out, refined_out, n: int) -> list[float]:
+        """Mean absolute rating delta per active user, stage-1 vs refined.
+
+        0.0 = refinement left the predicted rating row unchanged; larger
+        values mean the aggregated answer was further from the refined one
+        (in rating units) — the serving-path analogue of the paper's
+        prediction-error metric.
+        """
+        s1 = np.asarray(stage1_out[:n], dtype=np.float64)
+        s2 = np.asarray(refined_out[:n], dtype=np.float64)
+        return [float(v) for v in np.mean(np.abs(s2 - s1), axis=-1)]
+
 
 # ---------------------------------------------------------------------------
 # shuffle-cost model (paper Fig. 5 semantics)

@@ -377,22 +377,47 @@ class KNNServable(serve_servable.LSHServableBase):
     def run(
         self, prepared: KNNAggregates, batch_payload: tuple,
         *, refine_budget: int,
-    ) -> jax.Array:
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
         (test_x,) = batch_payload
+
+        def reduce_fn(g):
+            # Keep the merged top-k (distances, labels) next to the vote:
+            # the vote is the answer, the neighbour sets feed the stage-1 vs
+            # refined accuracy proxy (top-k label-overlap divergence).
+            d, l = merge_topk(g[0], g[1], self.k)
+            return d, l, majority_vote(d, l, self.n_classes)
+
         map_fn = partial(accurateml_map, k=self.k, refine_budget=refine_budget)
         combine = engine_lib.CombineSpec(
-            mode="all_gather",
-            reduce_fn=lambda g: majority_vote(
-                *merge_topk(g[0], g[1], self.k), self.n_classes
-            ),
+            mode="all_gather", reduce_fn=reduce_fn,
         )
         return self.engine.run(
             map_fn, combine, self.train_x, self.train_y,
             replicated_args=(prepared, test_x),
         )
 
-    def unpack(self, outputs: jax.Array, n: int) -> list:
-        return [int(v) for v in np.asarray(outputs[:n])]
+    def unpack(self, outputs: tuple, n: int) -> list:
+        return [int(v) for v in np.asarray(outputs[2][:n])]
+
+    def accuracy_proxy(self, stage1_out, refined_out, n: int) -> list[float]:
+        """1 - (top-k label multiset overlap / k) per query.
+
+        0.0 = refinement kept the same neighbour-label multiset; 1.0 = it
+        replaced every neighbour.  Padding rows (distance >= BIG/2) are
+        excluded from both sides; the denominator stays k so lost
+        neighbours also count as divergence.
+        """
+        import collections
+
+        d1, l1 = np.asarray(stage1_out[0][:n]), np.asarray(stage1_out[1][:n])
+        d2, l2 = np.asarray(refined_out[0][:n]), np.asarray(refined_out[1][:n])
+        out = []
+        for i in range(n):
+            c1 = collections.Counter(l1[i][d1[i] < BIG / 2].tolist())
+            c2 = collections.Counter(l2[i][d2[i] < BIG / 2].tolist())
+            overlap = sum((c1 & c2).values())
+            out.append(1.0 - overlap / self.k)
+        return out
 
 
 def accuracy(pred: jax.Array, truth: jax.Array) -> float:

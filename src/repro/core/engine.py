@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.obs.trace import current_tracer
+
 
 def _tree_bytes(tree: Any) -> int:
     """Static byte size of a pytree of (Shape)DtypeStructs or arrays."""
@@ -71,23 +73,50 @@ class MapReduce:
         *sharded_args: Any,
         replicated_args: tuple = (),
     ) -> Any:
+        # Tracing: spans attach to the context tracer installed by the
+        # caller (repro.serve installs its per-batch tracer around execute).
+        # With a live tracer the engine blocks at stage boundaries so span
+        # durations mean "work finished here", not "dispatch returned here";
+        # with the default NULL_TRACER nothing blocks and nothing records.
+        tracer = current_tracer()
+
         if self.mesh is None:
-            out = map_fn(*sharded_args, *replicated_args)
-            # Identity combine keeps outputs shard-local: no shuffle, same as
-            # the mesh path reports.
-            self.last_shuffle_bytes = (
-                0
-                if combine.mode == "identity"
-                else _tree_bytes(
-                    jax.eval_shape(map_fn, *sharded_args, *replicated_args)
+            with tracer.span("mapreduce", mode=combine.mode, shards=1) as mr:
+                with tracer.span("map.shard", shard=0) as m_sp:
+                    out = map_fn(*sharded_args, *replicated_args)
+                    if tracer.enabled:
+                        out = jax.block_until_ready(out)
+                # Identity combine keeps outputs shard-local: no shuffle,
+                # same as the mesh path reports.
+                self.last_shuffle_bytes = (
+                    0
+                    if combine.mode == "identity"
+                    else _tree_bytes(
+                        jax.eval_shape(map_fn, *sharded_args, *replicated_args)
+                    )
                 )
-            )
-            if combine.mode == "all_gather":
-                stacked = jax.tree_util.tree_map(lambda x: x[None], out)
-                return combine.reduce_fn(stacked) if combine.reduce_fn else stacked
-            if combine.mode == "psum":
-                return combine.reduce_fn(out) if combine.reduce_fn else out
-            return out
+                m_sp.set(shuffle_bytes=self.last_shuffle_bytes)
+                mr.set(shuffle_bytes=self.last_shuffle_bytes)
+                if combine.mode == "all_gather":
+                    stacked = jax.tree_util.tree_map(lambda x: x[None], out)
+                    with tracer.span("reduce"):
+                        result = (
+                            combine.reduce_fn(stacked)
+                            if combine.reduce_fn else stacked
+                        )
+                        if tracer.enabled:
+                            result = jax.block_until_ready(result)
+                    return result
+                if combine.mode == "psum":
+                    with tracer.span("reduce"):
+                        result = (
+                            combine.reduce_fn(out) if combine.reduce_fn
+                            else out
+                        )
+                        if tracer.enabled:
+                            result = jax.block_until_ready(result)
+                    return result
+                return out
 
         axis = self.axis
         n_shards = self.mesh.shape[axis]
@@ -135,7 +164,23 @@ class MapReduce:
         self.last_shuffle_bytes = (
             per_shard * n_shards if out_mode != "identity" else 0
         )
-        return fn(*sharded_args, *replicated_args)
+        with tracer.span(
+            "mapreduce", mode=out_mode, shards=n_shards,
+            shuffle_bytes=self.last_shuffle_bytes,
+        ):
+            if tracer.enabled:
+                # One jit dispatch covers every shard on the mesh path, so
+                # per-shard *time* can't be split honestly; attribute the
+                # per-shard shuffle contribution as zero-duration events and
+                # time the fused execution as one span.
+                per = self.last_shuffle_bytes // n_shards if n_shards else 0
+                for i in range(n_shards):
+                    tracer.event("map.shard", shard=i, shuffle_bytes=per)
+            with tracer.span("map+reduce.fused"):
+                result = fn(*sharded_args, *replicated_args)
+                if tracer.enabled:
+                    result = jax.block_until_ready(result)
+            return result
 
 
 def shard_leading(mesh: Mesh, axis: str, tree: Any) -> Any:

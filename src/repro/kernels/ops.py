@@ -43,6 +43,48 @@ def _on_tpu() -> bool:
         return False
 
 
+def dispatch_path(force: str | None = None) -> str:
+    """The path a call with this ``force`` takes: ref/pallas_interpret/pallas."""
+    force = _resolve(force)
+    if force is not None:
+        return force
+    return "pallas" if _on_tpu() else "ref"
+
+
+# ---------------------------------------------------------------------------
+# observability hook (repro.obs.probes.KernelProbe)
+#
+# When a probe is installed, host-level op calls are timed around
+# block_until_ready and recorded (measured p50 per kernel path); calls made
+# while an outer jit is tracing are passed through untouched.  With no probe
+# the wrappers cost one ``is None`` test — the hot path stays lean.
+# ---------------------------------------------------------------------------
+
+_PROBE = None
+
+
+def set_probe(probe) -> None:
+    global _PROBE
+    _PROBE = probe
+
+
+def get_probe():
+    return _PROBE
+
+
+def _probed(op_name: str):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            probe = _PROBE
+            if probe is None:
+                return fn(*args, **kwargs)
+            return probe.timed(op_name, fn, args, kwargs)
+        return wrapper
+    return deco
+
+
+@_probed("knn_distance")
 @functools.partial(jax.jit, static_argnames=("force",))
 def knn_distance(
     queries: jax.Array, points: jax.Array, *, force: str | None = None
@@ -59,6 +101,7 @@ def knn_distance(
     return ref.knn_distance(queries, points)
 
 
+@_probed("lsh_hash")
 @functools.partial(jax.jit, static_argnames=("width", "force"))
 def lsh_hash(
     data: jax.Array, a: jax.Array, b: jax.Array, width: float,
@@ -76,6 +119,7 @@ def lsh_hash(
     return ref.lsh_hash(data, a, b, width)
 
 
+@_probed("cf_weights")
 @functools.partial(jax.jit, static_argnames=("force",))
 def cf_weights(
     active: jax.Array, active_mask: jax.Array,
@@ -95,6 +139,7 @@ def cf_weights(
     return ref.cf_weights(active, active_mask, users, users_mask)
 
 
+@_probed("aggregated_attention_decode")
 @functools.partial(jax.jit, static_argnames=("scale", "force"))
 def aggregated_attention_decode(
     q, k_cache, v_cache, bucket_of, mean_k, mean_v, counts, refined,
@@ -124,6 +169,7 @@ def aggregated_attention_decode(
 # fused two-stage hot-path kernels (streaming top-k + gather-free refine)
 # ---------------------------------------------------------------------------
 
+@_probed("distance_topk")
 @functools.partial(jax.jit, static_argnames=("k", "force"))
 def distance_topk(
     queries: jax.Array, points: jax.Array, labels: jax.Array,
@@ -147,6 +193,7 @@ def distance_topk(
     return ref.distance_topk(queries, points, labels, valid, k=k)
 
 
+@_probed("candidate_topk")
 @functools.partial(jax.jit, static_argnames=("k", "force"))
 def candidate_topk(
     dists: jax.Array, labels: jax.Array,
@@ -171,6 +218,7 @@ def candidate_topk(
     return ref.candidate_topk(dists, labels, init_d, init_l, k=k)
 
 
+@_probed("refine_distances")
 @functools.partial(jax.jit, static_argnames=("force",))
 def refine_distances(
     queries: jax.Array, train_x: jax.Array,
@@ -190,6 +238,7 @@ def refine_distances(
     return ref.refine_distances(queries, train_x, idx, valid)
 
 
+@_probed("cf_refine")
 @functools.partial(jax.jit, static_argnames=("shrink", "force"))
 def cf_refine(
     active: jax.Array, active_mask: jax.Array,

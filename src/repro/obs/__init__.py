@@ -1,0 +1,75 @@
+"""repro.obs — end-to-end observability for the anytime serving path.
+
+The paper's product is a *trade-off curve* (execution time vs. accuracy
+loss, §IV); this subsystem makes both axes observable from the running
+system instead of only from offline benchmarks.
+
+Layers (trace -> metrics -> probes)
+===================================
+
+    [ trace ]    repro.obs.trace — span trees with explicit host clocks
+        |        (never read inside jit).  One served batch yields one
+        |        tree: batcher enqueue->admit waits, the deadline grant,
+        |        the aggregate-cache lookup (hit/built/merged/restored),
+        |        per-shard MapReduce map/combine/reduce with shuffle bytes,
+        |        and stage-2 refinement.  Propagated by contextvar
+        |        (use_tracer / current_tracer): the engine and store pick
+        |        the tracer up without threading a parameter; the default
+        |        NULL_TRACER makes every call a no-op.  Export: JSON-lines
+        |        (schema pinned by validate_trace_jsonl) + tree dump.
+        v
+    [ metrics ]  repro.obs.metrics — typed registry of counters, gauges,
+        |        fixed-bucket histograms, and bounded reservoirs (Vitter
+        |        algorithm R: flat memory under sustained load, the fix for
+        |        ServeMetrics' unbounded latency lists) with labeled series
+        |        (servable kind, SLO class, cache source, kernel op/path).
+        |        Export: snapshot() JSON (validate_snapshot pins the
+        |        schema) + Prometheus text.  ServeMetrics is reimplemented
+        |        on this registry; summary() stays API-compatible.
+        v
+    [ probes ]   repro.obs.probes — KernelProbe hooks the dispatch layer in
+                 kernels/ops.py: host-level op calls are timed around
+                 block_until_ready (measured p50 per kernel path, the
+                 BENCH_kernels.json measured-time channel), in-trace calls
+                 are skipped (clocks inside jit record trace time, not run
+                 time).  The accuracy-proxy channel (stage-1 vs refined
+                 divergence: top-k overlap for kNN, rating-MAE delta for
+                 CF) rides Servable.accuracy_proxy into ServeMetrics — the
+                 hook ROADMAP item 3's confidence intervals will fill.
+
+Everything is off by default and cheap when off: a server without a tracer
+runs against NULL_TRACER, and the kernel wrappers cost one ``is None``
+test when no probe is installed.
+"""
+from repro.obs.metrics import (
+    Counter, Gauge, Histogram, MetricsRegistry, Reservoir,
+    default_registry, percentile, validate_snapshot,
+)
+from repro.obs.probes import (
+    KernelProbe, install_kernel_probe, uninstall_kernel_probe,
+)
+from repro.obs.trace import (
+    NULL_TRACER, NullTracer, Span, Tracer, current_tracer, use_tracer,
+    validate_trace_jsonl,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "KernelProbe",
+    "MetricsRegistry",
+    "NULL_TRACER",
+    "NullTracer",
+    "Reservoir",
+    "Span",
+    "Tracer",
+    "current_tracer",
+    "default_registry",
+    "install_kernel_probe",
+    "percentile",
+    "uninstall_kernel_probe",
+    "use_tracer",
+    "validate_snapshot",
+    "validate_trace_jsonl",
+]

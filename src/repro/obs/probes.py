@@ -1,0 +1,132 @@
+"""Kernel and accuracy probes: measured-time telemetry for the hot path.
+
+``KernelProbe`` hooks the public dispatch wrappers in ``repro.kernels.ops``:
+when installed, every *host-level* kernel call is timed around
+``block_until_ready`` and recorded into a metrics registry as a reservoir
+(measured p50 per op) plus byte counters, labeled by op name and dispatch
+path (``ref`` / ``pallas_interpret`` / ``pallas``).  This is the
+measured-time channel the BENCH trajectory needs next to the modeled
+HBM-bytes diagnostic (the ``BENCH_kernels.json`` caveat).
+
+Two honesty rules:
+
+  * calls that happen *inside* a jit trace (kernel ops invoked while an
+    outer jitted function is being traced) are skipped — any clock read
+    there would record trace time, not run time (outputs are tracers, the
+    check is cheap);
+  * when no probe is installed the wrappers in ``ops.py`` fall through with
+    a single ``is None`` test, so the un-observed hot path stays lean.
+
+The accuracy-proxy channel rides ``repro.serve`` instead: servables define
+``accuracy_proxy(stage1_out, refined_out, n)`` (top-k overlap divergence
+for kNN, rating-MAE delta for CF) and ``ServeMetrics`` records it — the
+hook that error-bounded answers (ROADMAP item 3) will later turn into
+confidence intervals.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.kernels import ops as ops_lib
+from repro.obs.metrics import MetricsRegistry, default_registry
+
+try:  # jax >= 0.4.x
+    _Tracer = jax.core.Tracer
+except AttributeError:  # pragma: no cover - very old/new jax layouts
+    from jax import core as _jax_core
+    _Tracer = _jax_core.Tracer
+
+
+def _tree_nbytes(tree: Any) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        shape = getattr(leaf, "shape", None)
+        dtype = getattr(leaf, "dtype", None)
+        if shape is None or dtype is None:
+            continue
+        total += math.prod(shape) * dtype.itemsize
+    return total
+
+
+class KernelProbe:
+    """Per-op measured wall time + bytes, recorded into a registry."""
+
+    def __init__(
+        self,
+        registry: MetricsRegistry | None = None,
+        *,
+        clock: Callable[[], float] = time.perf_counter,
+        capacity: int = 512,
+    ):
+        self.registry = registry if registry is not None else default_registry()
+        self.clock = clock
+        self._latency = self.registry.reservoir(
+            "kernel_latency_s",
+            "Measured host wall time per kernel-op call (block_until_ready).",
+            labels=("op", "path"), capacity=capacity,
+        )
+        self._bytes = self.registry.counter(
+            "kernel_bytes_total",
+            "Input+output array bytes moved per kernel op (host-level calls).",
+            labels=("op", "path"),
+        )
+        self._calls = self.registry.counter(
+            "kernel_calls_total",
+            "Host-level kernel-op calls (in-trace calls are not counted).",
+            labels=("op", "path"),
+        )
+
+    # Called by the ops.py dispatch wrappers.
+    def timed(self, op: str, fn: Callable, args: tuple, kwargs: dict) -> Any:
+        t0 = self.clock()
+        out = fn(*args, **kwargs)
+        if any(
+            isinstance(leaf, _Tracer)
+            for leaf in jax.tree_util.tree_leaves(out)
+        ):
+            # Inside an outer jit trace: wall clock is meaningless here.
+            return out
+        out = jax.block_until_ready(out)
+        dt = self.clock() - t0
+        path = ops_lib.dispatch_path(kwargs.get("force"))
+        self._latency.labels(op=op, path=path).observe(dt)
+        self._calls.labels(op=op, path=path).inc()
+        self._bytes.labels(op=op, path=path).inc(
+            _tree_nbytes(args) + _tree_nbytes(out)
+        )
+        return out
+
+    def summary(self) -> dict:
+        """{"op[path]": {count, p50_s, mean_s, bytes}} for BENCH embeds."""
+        out: dict = {}
+        byte_series = {
+            tuple(sorted(labels.items())): s.value
+            for labels, s in self._bytes.series()
+        }
+        for labels, s in self._latency.series():
+            key = f"{labels['op']}[{labels['path']}]"
+            out[key] = {
+                "count": s.count,
+                "p50_s": s.percentile(50),
+                "mean_s": s.mean,
+                "bytes": byte_series.get(tuple(sorted(labels.items())), 0.0),
+            }
+        return out
+
+
+def install_kernel_probe(
+    registry: MetricsRegistry | None = None, **kwargs: Any
+) -> KernelProbe:
+    """Create a probe and hook it into the kernel dispatch layer."""
+    probe = KernelProbe(registry, **kwargs)
+    ops_lib.set_probe(probe)
+    return probe
+
+
+def uninstall_kernel_probe() -> None:
+    """Detach any installed probe (dispatch reverts to the lean path)."""
+    ops_lib.set_probe(None)

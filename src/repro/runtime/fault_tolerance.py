@@ -25,6 +25,26 @@ import jax
 
 from repro.core.budget import BudgetPolicy, CostModel
 from repro.checkpoint import Checkpointer
+from repro.obs.metrics import default_registry
+from repro.obs.trace import current_tracer
+
+
+def emit_shard_event(event: str, shard: int, step: int, **attrs: Any) -> None:
+    """Publish one shard lifecycle event (started/straggling/finished).
+
+    Dual-channel: a zero-duration span on the context tracer (so shard
+    lifecycle shows up inside whatever trace is being recorded) and a
+    labeled counter in the process-wide registry (so BENCH snapshots count
+    them even when no tracer is installed).
+    """
+    current_tracer().event(
+        f"shard.{event}", shard=shard, step=step, **attrs
+    )
+    default_registry().counter(
+        "runtime_shard_events_total",
+        "Shard lifecycle events seen by the supervisor.",
+        labels=("event", "shard"),
+    ).labels(event=event, shard=shard).inc()
 
 
 class FailureInjector:
@@ -41,11 +61,14 @@ class FailureInjector:
 class Heartbeat:
     """Per-shard liveness + progress record (control plane state)."""
 
+    shard: int = 0
     step: int = -1
     t_last: float = 0.0
     alive: bool = True
 
     def beat(self, step: int):
+        if self.step < 0:
+            emit_shard_event("started", self.shard, step)
         self.step = step
         self.t_last = time.monotonic()
         self.alive = True
@@ -106,16 +129,19 @@ class Supervisor:
                 model = CostModel(c_stage1=1e-6, c_stage2=1e-6)
                 eps = self.budget.shard_eps(model, 10_000, 0.5)
                 self.straggler_events.append((step, eps))
+                emit_shard_event("straggling", 0, step, eps=eps)
                 self.injector.fail_steps.pop(step, None)
 
             state = step_fn(state, step)
-            hb = self.heartbeats.setdefault(0, Heartbeat())
+            hb = self.heartbeats.setdefault(0, Heartbeat(shard=0))
             hb.beat(step)
             step += 1
             if step % self.save_every == 0 or step == num_steps:
                 self.ckpt.save(
                     step, state, extra={"step": step}, blocking=True
                 )
+        for hb in self.heartbeats.values():
+            emit_shard_event("finished", hb.shard, hb.step)
         return state, {
             "restarts": self.restarts,
             "stragglers": self.straggler_events,

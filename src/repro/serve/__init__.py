@@ -41,7 +41,14 @@ Life of a request::
         |
     [ ServeMetrics ]       repro.serve.metrics — p50/p99 of both anytime
                            latencies, granted-eps stats, deadline-met rate,
-                           cache hit rate, shuffle bytes
+                           cache hit rate, shuffle bytes, and the stage-1 vs
+                           refined accuracy proxy — bounded reservoirs on a
+                           repro.obs.MetricsRegistry (flat memory, labeled
+                           series, Prometheus/JSON export)
+
+Observability: pass ``tracer=repro.obs.Tracer()`` to ``Server`` and every
+batch records a span tree (batcher wait -> grant -> cache lookup -> per-shard
+map -> refine); see ``repro.obs`` and ``examples/observe_serving.py``.
 
 Workloads implement the small ``Servable`` protocol (repro.serve.request);
 ``repro.apps.knn.KNNServable`` and ``repro.apps.cf.CFServable`` are the two

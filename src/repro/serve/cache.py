@@ -40,6 +40,7 @@ class AggregateCache:
         self.evictions = 0
         self.coarsened_hits = 0   # miss answered by a cross-ratio merge
         self.restored_hits = 0    # miss answered from a disk snapshot
+        self.last_source = "none"  # where the latest lookup was satisfied
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -57,6 +58,7 @@ class AggregateCache:
         key = (servable.name, servable.cache_key(compression_ratio))
         if key in self._entries:
             self.hits += 1
+            self.last_source = "hit"
             self._entries.move_to_end(key)
             return self._entries[key], True
         self.misses += 1
@@ -67,8 +69,10 @@ class AggregateCache:
                 self.coarsened_hits += 1
             elif source == SOURCE_RESTORED:
                 self.restored_hits += 1
+            self.last_source = source
         else:
             prepared = servable.build(compression_ratio)
+            self.last_source = "built"
         self._insert(key, prepared)
         return prepared, False
 

@@ -1,102 +1,231 @@
 """Serving metrics: latency percentiles, granted eps, cache hits, shuffle bytes.
 
-One record per answered request, aggregated into the summary the BENCH
-harness emits.  Latency is recorded twice per the anytime contract:
-``stage1_latency_s`` (admission -> initial answer) and ``total_latency_s``
-(admission -> best answer), so the accuracy-vs-deadline trade-off the paper
-plots offline falls out of the serving path directly.
+Reimplemented on ``repro.obs.metrics.MetricsRegistry`` so the serving path
+shares one metrics vocabulary with the kernel probes and the runtime, and so
+memory stays flat under sustained load: per-request latency/eps samples land
+in bounded reservoirs (Vitter algorithm R) instead of the unbounded Python
+lists the first version kept.  Exact count/sum/min/max survive sampling, so
+``summary()`` is unchanged for small runs and statistically faithful for
+long ones.
+
+Latency is recorded twice per the anytime contract: ``stage1_latency_s``
+(admission -> initial answer) and ``total_latency_s`` (admission -> best
+answer), so the accuracy-vs-deadline trade-off the paper plots offline falls
+out of the serving path directly.  New in this layer: the accuracy-proxy
+channel (stage-1 vs refined divergence per request, when the servable can
+compute it) and cache-source attribution (hit / built / merged / restored).
+
+Each ``ServeMetrics`` owns a *private* registry — two servers in one process
+must never share counters.  ``snapshot()``/``to_prometheus()`` export it.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Sequence
 
-import numpy as np
-
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.metrics import percentile as _percentile
 from repro.serve.request import Response
+
+# Per-series retained samples; exact stats are kept regardless (algorithm R).
+RESERVOIR_CAPACITY = 4096
+
+# Deadline -> coarse SLO class label (for per-class attainment series).
+_SLO_CLASSES = ((0.01, "lt10ms"), (0.1, "lt100ms"), (1.0, "lt1s"))
 
 
 def percentile(values: Sequence[float], p: float) -> float:
     """Linear-interpolated percentile (p in [0, 100]); nan on empty input."""
-    if not values:
-        return math.nan
-    return float(np.percentile(list(values), p))
+    return _percentile(values, p)
 
 
-@dataclasses.dataclass
+def slo_class(deadline_s: float) -> str:
+    for bound, name in _SLO_CLASSES:
+        if deadline_s < bound:
+            return name
+    return "ge1s"
+
+
 class ServeMetrics:
-    """Accumulates per-request records and batch-level counters."""
+    """Accumulates per-request records and batch-level counters.
 
-    responses: list[Response] = dataclasses.field(default_factory=list)
-    shuffle_bytes_total: int = 0
-    n_batches: int = 0
-    occupancy_total: int = 0
+    Rates in ``summary()`` follow the re-execution rule: re-execution rows
+    carry a server-invented relaxed deadline; they are real work (latency,
+    eps, shuffle) but must not count toward SLO attainment or request
+    volume — that would double-count every escalated request and flatter
+    ``deadline_met_rate``.
+    """
 
+    def __init__(self, *, capacity: int = RESERVOIR_CAPACITY):
+        self.registry = MetricsRegistry()
+        r = self.registry
+        self._responses = r.counter(
+            "serve_responses_total", "Responses emitted (incl. re-executions).",
+            labels=("kind",),
+        )
+        self._reexecutions = r.counter(
+            "serve_reexecutions_total", "Escalation re-execution responses.",
+            labels=("kind",),
+        )
+        self._refined = r.counter(
+            "serve_refined_total", "Responses carrying a stage-2 answer.",
+            labels=("kind",),
+        )
+        self._deadline_met = r.counter(
+            "serve_deadline_met_total",
+            "First responses whose stage-1 answer beat the SLO.",
+            labels=("kind", "slo"),
+        )
+        self._slo_seen = r.counter(
+            "serve_requests_total",
+            "First responses by servable kind and SLO class.",
+            labels=("kind", "slo"),
+        )
+        self._escalated = r.counter(
+            "serve_escalated_total",
+            "First responses whose grant fell below the eps floor.",
+            labels=("kind",),
+        )
+        self._batches = r.counter(
+            "serve_batches_total", "Executed batches."
+        )
+        self._shuffle = r.counter(
+            "serve_shuffle_bytes_total",
+            "Map->reduce shuffle bytes metered by the engine.",
+        )
+        self._occupancy = r.counter(
+            "serve_batch_occupancy_total",
+            "Real (un-padded) requests packed into executed batches.",
+        )
+        self._cache_source = r.counter(
+            "serve_cache_source_total",
+            "Aggregate lookups by source (hit/built/merged/restored).",
+            labels=("source",),
+        )
+        self._stage1_ms = r.reservoir(
+            "serve_stage1_latency_ms", "Admission -> stage-1 answer (ms).",
+            labels=("kind",), capacity=capacity,
+        )
+        self._total_ms = r.reservoir(
+            "serve_total_latency_ms", "Admission -> best answer (ms).",
+            labels=("kind",), capacity=capacity,
+        )
+        self._eps = r.reservoir(
+            "serve_eps_granted", "Refinement fraction granted per response.",
+            labels=("kind",), capacity=capacity,
+        )
+        self._accuracy = r.reservoir(
+            "serve_accuracy_proxy",
+            "Stage-1 vs refined divergence (0 = refinement changed nothing).",
+            labels=("kind",), capacity=capacity,
+        )
+
+    # ------------------------------------------------------------------
     def record(self, response: Response) -> None:
-        self.responses.append(response)
+        kind = response.kind
+        self._responses.labels(kind=kind).inc()
+        self._stage1_ms.labels(kind=kind).observe(
+            response.stage1_latency_s * 1e3
+        )
+        self._total_ms.labels(kind=kind).observe(
+            response.total_latency_s * 1e3
+        )
+        self._eps.labels(kind=kind).observe(response.eps_granted)
+        if response.refined is not None:
+            self._refined.labels(kind=kind).inc()
+        proxy = getattr(response, "accuracy_proxy", None)
+        if proxy is not None:
+            self._accuracy.labels(kind=kind).observe(proxy)
+        if response.reexecuted:
+            self._reexecutions.labels(kind=kind).inc()
+            return
+        slo = slo_class(response.deadline_s)
+        self._slo_seen.labels(kind=kind, slo=slo).inc()
+        if response.deadline_met:
+            self._deadline_met.labels(kind=kind, slo=slo).inc()
+        if response.escalated:
+            self._escalated.labels(kind=kind).inc()
 
-    def record_batch(self, shuffle_bytes: int, occupancy: int = 0) -> None:
-        self.n_batches += 1
-        self.shuffle_bytes_total += shuffle_bytes
-        self.occupancy_total += occupancy
+    def record_batch(
+        self, shuffle_bytes: int, occupancy: int = 0,
+        cache_source: str | None = None,
+    ) -> None:
+        self._batches.inc()
+        self._shuffle.inc(shuffle_bytes)
+        self._occupancy.inc(occupancy)
+        if cache_source is not None:
+            self._cache_source.labels(source=cache_source).inc()
 
     def reset(self) -> None:
         """Drop all records (e.g. after a jit/cache warmup phase)."""
-        self.responses.clear()
-        self.shuffle_bytes_total = 0
-        self.n_batches = 0
-        self.occupancy_total = 0
+        self.registry.reset()
+
+    # --- back-compat accessors (pre-registry attribute API) ---
+    @property
+    def n_batches(self) -> int:
+        return int(self._batches.value)
+
+    @property
+    def shuffle_bytes_total(self) -> int:
+        return int(self._shuffle.value)
+
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Full registry snapshot (schema-pinned JSON) for BENCH embeds."""
+        return self.registry.snapshot()
+
+    def to_prometheus(self) -> str:
+        return self.registry.to_prometheus()
 
     # ------------------------------------------------------------------
     def summary(
         self, cache_stats: dict | None = None,
         store_stats: list[dict] | None = None,
     ) -> dict:
-        rs = self.responses
-        # Re-execution rows carry a server-invented relaxed deadline; they
-        # are real work (latency, eps, shuffle) but must not count toward
-        # SLO attainment or request volume — that would double-count every
-        # escalated request and flatter deadline_met_rate.
-        firsts = [r for r in rs if not r.reexecuted]
-        stage1_ms = [r.stage1_latency_s * 1e3 for r in rs]
-        total_ms = [r.total_latency_s * 1e3 for r in rs]
-        eps = [r.eps_granted for r in rs]
+        n_all = int(self._responses.total())
+        n_reexec = int(self._reexecutions.total())
+        n_first = n_all - n_reexec
+        eps = self._eps.merged_stats()
+        acc = self._accuracy.merged_stats()
+        n_batches = self.n_batches
         out = {
-            "n_requests": len(firsts),
-            "n_reexecutions": len(rs) - len(firsts),
-            "n_batches": self.n_batches,
+            "n_requests": n_first,
+            "n_reexecutions": n_reexec,
+            "n_batches": n_batches,
             "stage1_latency_ms": {
-                "p50": percentile(stage1_ms, 50),
-                "p99": percentile(stage1_ms, 99),
+                "p50": percentile(self._stage1_ms.merged_samples(), 50),
+                "p99": percentile(self._stage1_ms.merged_samples(), 99),
             },
             "total_latency_ms": {
-                "p50": percentile(total_ms, 50),
-                "p99": percentile(total_ms, 99),
+                "p50": percentile(self._total_ms.merged_samples(), 50),
+                "p99": percentile(self._total_ms.merged_samples(), 99),
             },
             "eps_granted": {
-                "mean": sum(eps) / len(eps) if eps else math.nan,
-                "min": min(eps) if eps else math.nan,
-                "max": max(eps) if eps else math.nan,
+                "mean": eps["mean"],
+                "min": eps["min"],
+                "max": eps["max"],
             },
             "deadline_met_rate": (
-                sum(1 for r in firsts if r.deadline_met) / len(firsts)
-                if firsts else math.nan
+                self._deadline_met.total() / n_first if n_first else math.nan
             ),
             "refined_rate": (
-                sum(1 for r in rs if r.refined is not None) / len(rs)
-                if rs else math.nan
+                self._refined.total() / n_all if n_all else math.nan
             ),
             "escalated_rate": (
-                sum(1 for r in firsts if r.escalated) / len(firsts)
-                if firsts else math.nan
+                self._escalated.total() / n_first if n_first else math.nan
             ),
             "shuffle_bytes_total": self.shuffle_bytes_total,
             "mean_batch_occupancy": (
-                self.occupancy_total / self.n_batches
-                if self.n_batches else math.nan
+                self._occupancy.value / n_batches if n_batches else math.nan
             ),
         }
+        if acc["count"]:
+            out["accuracy_proxy"] = {
+                "n": acc["count"],
+                "mean": acc["mean"],
+                "p50": acc["p50"],
+                "max": acc["max"],
+            }
         if cache_stats is not None:
             out["cache"] = dict(cache_stats)
             misses = cache_stats.get("misses", 0)

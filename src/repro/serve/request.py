@@ -58,6 +58,9 @@ class Response:
     reexecuted: bool = False       # answer came from the re-execution path
     cache_hit: bool = False        # aggregates served from the cache
     batch_size: int = 0            # real requests packed into the batch
+    # Stage-1 vs refined divergence (0.0 = refinement changed nothing);
+    # None when stage 2 didn't run or the servable can't compute it.
+    accuracy_proxy: float | None = None
 
     @property
     def answer(self) -> Any:
@@ -73,6 +76,13 @@ class Servable(Protocol):
     ``batch`` (the scheduler's quantized size) so ``run`` hits a bounded set
     of jit signatures; ``unpack`` slices the first ``n`` real answers back
     out.
+
+    Optionally a servable may also define ``accuracy_proxy(stage1_out,
+    refined_out, n) -> list[float]`` returning one per-request divergence
+    score between the stage-1 and refined batched outputs (0.0 = refinement
+    changed nothing).  It is *not* part of this protocol's required surface
+    — the server discovers it with ``getattr`` and records it into the
+    metrics' accuracy-proxy channel when present.
     """
 
     name: str

@@ -29,6 +29,7 @@ import jax
 
 from repro.core.budget import BudgetPolicy
 from repro.core.refine import eps_to_budget
+from repro.obs.trace import NULL_TRACER, NullTracer, Tracer, use_tracer
 from repro.serve.cache import AggregateCache
 from repro.serve.deadline import DeadlineController
 from repro.serve.metrics import ServeMetrics
@@ -51,6 +52,7 @@ class Server:
         batcher: ContinuousBatcher | None = None,
         cache: AggregateCache | None = None,
         clock: Callable[[], float] = time.perf_counter,
+        tracer: Tracer | NullTracer | None = None,
     ):
         self.servables: dict[str, Servable] = {s.name: s for s in servables}
         if not self.servables:
@@ -62,6 +64,10 @@ class Server:
         self.cache = cache or AggregateCache()
         self.metrics = ServeMetrics()
         self.clock = clock
+        # Span-tree recorder for the whole batch path (repro.obs).  The
+        # default NULL_TRACER no-ops every call, so an un-observed server
+        # pays nothing; pass obs.Tracer(clock=...) to record.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # (kind, padded_size, refine_budget) combos already executed once:
         # first executions pay jit compile, so their wall time must not
         # feed the controller's cost correction.
@@ -176,93 +182,149 @@ class Server:
 
     # ------------------------------------------------------------------
     def _execute(self, batch: ScheduledBatch) -> list[Response]:
+        # Install the server's tracer as the context tracer so the deeper
+        # layers (MapReduce engine, aggregate store) attach their spans to
+        # this batch's tree without a parameter threading through.
+        with use_tracer(self.tracer):
+            return self._execute_batch(batch)
+
+    def _execute_batch(self, batch: ScheduledBatch) -> list[Response]:
         servable = self.servables[batch.kind]
         reexecution = all(r.reexecution for r in batch.requests)
-        t_start = self.clock()
+        tracer = self.tracer
+        with tracer.span(
+            "serve.batch", kind=batch.kind, n=batch.n,
+            padded=batch.padded_size, reexecution=reexecution,
+        ) as root:
+            t_start = self.clock()
+            if tracer.enabled:
+                # Queue wait per request, from clock values captured at
+                # admission (a span can't wrap work that already happened).
+                for req in batch.requests:
+                    tracer.add_span(
+                        "batcher.wait", req.arrival_t, t_start,
+                        rid=req.rid, deadline_s=req.deadline_s,
+                    )
 
-        if reexecution:
-            # Fault path: refine at full eps, no deadline pressure.
-            grant = self.controller.grant(
-                batch.kind, servable.n_points, float("inf")
-            )
-        else:
-            grant = self.controller.grant(
-                batch.kind, servable.n_points, batch.min_remaining(t_start)
-            )
-
-        prepared, cache_hit = self.cache.get_or_build(
-            servable, grant.compression_ratio
-        )
-        padded = servable.pad_batch(
-            [r.payload for r in batch.requests], batch.padded_size
-        )
-        combos = {(batch.kind, batch.padded_size, 0)}
-        if grant.refine_budget > 0:
-            combos.add((batch.kind, batch.padded_size, grant.refine_budget))
-        warmed = combos <= self._seen_combos
-        shuffle_bytes = 0
-
-        # ---- stage 1: immediate aggregated answers ----
-        s1_out = jax.block_until_ready(
-            servable.run(prepared, padded, refine_budget=0)
-        )
-        t_stage1 = self.clock()
-        shuffle_bytes += servable.last_shuffle_bytes
-        stage1_answers = servable.unpack(s1_out, batch.n)
-        for req, ans in zip(batch.requests, stage1_answers):
-            if req.on_stage1 is not None:
-                req.on_stage1(req.rid, ans)
-
-        # ---- stage 2: refine if the grant left budget for it ----
-        refined_answers: list[Any] | None = None
-        if grant.refine_budget > 0:
-            ref_out = jax.block_until_ready(
-                servable.run(
-                    prepared, padded, refine_budget=grant.refine_budget
+            with tracer.span("deadline.grant") as g_sp:
+                if reexecution:
+                    # Fault path: refine at full eps, no deadline pressure.
+                    grant = self.controller.grant(
+                        batch.kind, servable.n_points, float("inf")
+                    )
+                else:
+                    grant = self.controller.grant(
+                        batch.kind, servable.n_points,
+                        batch.min_remaining(t_start),
+                    )
+                g_sp.set(
+                    eps=grant.eps, ratio=grant.compression_ratio,
+                    refine_budget=grant.refine_budget,
+                    escalate=grant.escalate, predicted_s=grant.predicted_s,
                 )
+
+            with tracer.span("cache.lookup") as c_sp:
+                prepared, cache_hit = self.cache.get_or_build(
+                    servable, grant.compression_ratio
+                )
+                cache_source = self.cache.last_source
+                c_sp.set(hit=cache_hit, source=cache_source)
+
+            padded = servable.pad_batch(
+                [r.payload for r in batch.requests], batch.padded_size
             )
+            combos = {(batch.kind, batch.padded_size, 0)}
+            if grant.refine_budget > 0:
+                combos.add(
+                    (batch.kind, batch.padded_size, grant.refine_budget)
+                )
+            warmed = combos <= self._seen_combos
+            shuffle_bytes = 0
+
+            # ---- stage 1: immediate aggregated answers ----
+            with tracer.span("stage1") as s1_sp:
+                s1_out = jax.block_until_ready(
+                    servable.run(prepared, padded, refine_budget=0)
+                )
+                s1_sp.set(shuffle_bytes=servable.last_shuffle_bytes)
+            t_stage1 = self.clock()
             shuffle_bytes += servable.last_shuffle_bytes
-            refined_answers = servable.unpack(ref_out, batch.n)
-        t_end = self.clock()
+            stage1_answers = servable.unpack(s1_out, batch.n)
+            for req, ans in zip(batch.requests, stage1_answers):
+                if req.on_stage1 is not None:
+                    req.on_stage1(req.rid, ans)
 
-        # Cold batches (fresh compile or aggregate build) are deploy cost,
-        # not steady-state serving cost: keep them out of the correction.
-        if warmed and cache_hit:
-            self.controller.observe(
-                batch.kind, grant.predicted_s, t_end - t_start
-            )
-        self._seen_combos |= combos
-        self.metrics.record_batch(shuffle_bytes, occupancy=batch.n)
+            # ---- stage 2: refine if the grant left budget for it ----
+            refined_answers: list[Any] | None = None
+            proxies: list[float] | None = None
+            if grant.refine_budget > 0:
+                with tracer.span(
+                    "stage2.refine", refine_budget=grant.refine_budget
+                ) as s2_sp:
+                    ref_out = jax.block_until_ready(
+                        servable.run(
+                            prepared, padded,
+                            refine_budget=grant.refine_budget,
+                        )
+                    )
+                    s2_sp.set(shuffle_bytes=servable.last_shuffle_bytes)
+                shuffle_bytes += servable.last_shuffle_bytes
+                refined_answers = servable.unpack(ref_out, batch.n)
+                proxy_fn = getattr(servable, "accuracy_proxy", None)
+                if proxy_fn is not None:
+                    # Stage-1 vs refined divergence per request: how much
+                    # the refinement actually moved the answer.
+                    proxies = proxy_fn(s1_out, ref_out, batch.n)
+            t_end = self.clock()
 
-        responses = []
-        for i, req in enumerate(batch.requests):
-            stage1_latency = t_stage1 - req.arrival_t
-            total_latency = (
-                t_end - req.arrival_t if refined_answers is not None
-                else stage1_latency
+            # Cold batches (fresh compile or aggregate build) are deploy
+            # cost, not steady-state serving cost: keep them out of the
+            # correction.
+            if warmed and cache_hit:
+                self.controller.observe(
+                    batch.kind, grant.predicted_s, t_end - t_start
+                )
+            self._seen_combos |= combos
+            self.metrics.record_batch(
+                shuffle_bytes, occupancy=batch.n, cache_source=cache_source
             )
-            resp = Response(
-                rid=req.rid,
-                kind=req.kind,
-                stage1=stage1_answers[i],
-                refined=refined_answers[i] if refined_answers else None,
-                eps_granted=grant.eps,
-                compression_ratio=grant.compression_ratio,
-                deadline_s=req.deadline_s,
-                queue_wait_s=t_start - req.arrival_t,
-                stage1_latency_s=stage1_latency,
-                total_latency_s=total_latency,
-                deadline_met=stage1_latency <= req.deadline_s,
-                escalated=grant.escalate,
-                reexecuted=req.reexecution,
-                cache_hit=cache_hit,
-                batch_size=batch.n,
+            root.set(
+                eps=grant.eps, shuffle_bytes=shuffle_bytes,
+                refined=refined_answers is not None,
             )
-            responses.append(resp)
-            self.metrics.record(resp)
-            if grant.escalate and not req.reexecution:
-                self._requeue_for_reexecution(req)
-        return responses
+
+            responses = []
+            for i, req in enumerate(batch.requests):
+                stage1_latency = t_stage1 - req.arrival_t
+                total_latency = (
+                    t_end - req.arrival_t if refined_answers is not None
+                    else stage1_latency
+                )
+                resp = Response(
+                    rid=req.rid,
+                    kind=req.kind,
+                    stage1=stage1_answers[i],
+                    refined=refined_answers[i] if refined_answers else None,
+                    eps_granted=grant.eps,
+                    compression_ratio=grant.compression_ratio,
+                    deadline_s=req.deadline_s,
+                    queue_wait_s=t_start - req.arrival_t,
+                    stage1_latency_s=stage1_latency,
+                    total_latency_s=total_latency,
+                    deadline_met=stage1_latency <= req.deadline_s,
+                    escalated=grant.escalate,
+                    reexecuted=req.reexecution,
+                    cache_hit=cache_hit,
+                    batch_size=batch.n,
+                    accuracy_proxy=(
+                        float(proxies[i]) if proxies is not None else None
+                    ),
+                )
+                responses.append(resp)
+                self.metrics.record(resp)
+                if grant.escalate and not req.reexecution:
+                    self._requeue_for_reexecution(req)
+            return responses
 
     def _requeue_for_reexecution(self, req: Request) -> None:
         self.batcher.submit(

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 from typing import Any, Hashable, Iterable, Iterator
 
+from repro.obs.trace import current_tracer
 from repro.store import persist as persist_lib
 from repro.store.pyramid import (
     SOURCE_BUILT, SOURCE_MEMORY, SOURCE_MERGED, SOURCE_RESTORED,
@@ -70,6 +71,10 @@ class AggregateStore:
             self.restores += 1
         else:
             self.memory_hits += 1
+        current_tracer().event(
+            "store.get", kind=servable.name, ratio=compression_ratio,
+            source=source,
+        )
         return prepared, source
 
     def adopt(
