@@ -1,0 +1,88 @@
+"""CLI regression gate over combined BENCH json files.
+
+Compares a fresh benchmark result against a committed baseline using the
+declarative metric specs in ``repro.obs.regression`` and exits non-zero
+when any gating metric regresses past its noise tolerance.  Measured
+wall-clock kernel speedups ride along as non-gating "watch" lines, so the
+interpret-host losses stay visible in every comparison.
+
+Inputs may be:
+
+  * a json file holding the combined dict ``benchmarks/run.py --out``
+    writes (or any per-suite ``BENCH_<suite>.json`` baseline),
+  * raw benchmark stdout — the last ``BENCH {...}`` line is parsed.
+
+Usage:
+
+    PYTHONPATH=src python -m benchmarks.compare BASELINE CURRENT
+        [--slack S]   scale every tolerance band (cross-run CI noise)
+        [--json]      machine-readable report on stdout
+
+Exit status: 0 when no gating metric regressed, 1 otherwise, 2 on input
+errors.  Self-comparison (same file twice) always passes — the gate's
+sanity anchor, pinned in CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.obs.regression import DEFAULT_SPECS, compare
+
+
+def load_bench(path: Path) -> dict:
+    """Load a combined BENCH dict from a json file or benchmark stdout."""
+    text = Path(path).read_text()
+    stripped = text.lstrip()
+    if stripped.startswith("{"):
+        return json.loads(text)
+    bench_lines = [
+        line[len("BENCH "):] for line in text.splitlines()
+        if line.startswith("BENCH ")
+    ]
+    if not bench_lines:
+        raise ValueError(f"{path}: neither a json object nor BENCH output")
+    return json.loads(bench_lines[-1])
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", type=Path)
+    ap.add_argument("current", type=Path)
+    ap.add_argument(
+        "--slack", type=float, default=1.0,
+        help="multiply every tolerance band (use > 1 for cross-run noise)",
+    )
+    ap.add_argument(
+        "--json", action="store_true", dest="as_json",
+        help="print the full report as json instead of text",
+    )
+    args = ap.parse_args(argv)
+
+    try:
+        baseline = load_bench(args.baseline)
+        current = load_bench(args.current)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"compare: {e}", file=sys.stderr)
+        return 2
+
+    report = compare(baseline, current, DEFAULT_SPECS, slack=args.slack)
+    if args.as_json:
+        print(json.dumps(report.to_dict(), indent=2))
+    else:
+        print(report.render())
+    if not report.ok:
+        for f in report.regressions:
+            print(
+                f"BENCH_REGRESSION,{f.path},"
+                f"{f.baseline:.6g}->{f.current:.6g}",
+                file=sys.stderr,
+            )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

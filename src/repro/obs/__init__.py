@@ -4,8 +4,8 @@ The paper's product is a *trade-off curve* (execution time vs. accuracy
 loss, §IV); this subsystem makes both axes observable from the running
 system instead of only from offline benchmarks.
 
-Layers (trace -> metrics -> probes)
-===================================
+Layers (trace -> metrics -> probes -> decision)
+===============================================
 
     [ trace ]    repro.obs.trace — span trees with explicit host clocks
         |        (never read inside jit).  One served batch yields one
@@ -28,48 +28,100 @@ Layers (trace -> metrics -> probes)
         |        on this registry; summary() stays API-compatible.
         v
     [ probes ]   repro.obs.probes — KernelProbe hooks the dispatch layer in
-                 kernels/ops.py: host-level op calls are timed around
-                 block_until_ready (measured p50 per kernel path, the
-                 BENCH_kernels.json measured-time channel), in-trace calls
-                 are skipped (clocks inside jit record trace time, not run
-                 time).  The accuracy-proxy channel (stage-1 vs refined
-                 divergence: top-k overlap for kNN, rating-MAE delta for
-                 CF) rides Servable.accuracy_proxy into ServeMetrics — the
-                 hook ROADMAP item 3's confidence intervals will fill.
+        |        kernels/ops.py: host-level op calls are timed around
+        |        block_until_ready (measured p50 per kernel path + pow2-
+        |        bucketed dominant-shape label, the BENCH_kernels.json
+        |        measured-time channel), in-trace calls are skipped (clocks
+        |        inside jit record trace time, not run time).  The
+        |        accuracy-proxy channel (stage-1 vs refined divergence:
+        |        top-k overlap for kNN, rating-MAE delta for CF) rides
+        |        Servable.accuracy_proxy into ServeMetrics — the hook
+        |        ROADMAP item 3's confidence intervals will fill.
+        v
+    [ decision ] the closed loop over the raw signals:
+                 * repro.obs.timeseries — WindowedRollup: aligned
+                   fixed-width windows over observations and registry
+                   counter deltas (rates, per-window streaming quantiles,
+                   "last 10s p99" next to lifetime reservoirs);
+                 * repro.obs.slo — declarative Objectives (deadline-met
+                   rate, windowed p99, accuracy-proxy floor) with
+                   multi-window burn-rate alerting + hysteresis,
+                   LoadSignal (the DeadlineController's windowed load
+                   input) and StragglerWatch (per-shard latency skew);
+                 * repro.obs.flight — FlightRecorder: tail-sampling ring
+                   keeping full span trees only for SLO-missed /
+                   escalated / slowest-decile batches;
+                 * repro.obs.regression — the BENCH gate: declarative
+                   MetricSpecs with noise tolerances compared by
+                   benchmarks/compare.py, measured wall-clock speedups as
+                   a non-gating watch channel.
 
 Everything is off by default and cheap when off: a server without a tracer
-runs against NULL_TRACER, and the kernel wrappers cost one ``is None``
-test when no probe is installed.
+runs against NULL_TRACER, the kernel wrappers cost one ``is None`` test
+when no probe is installed, and a server without ``window_s`` builds no
+rollup, monitor, or recorder.
 """
+from repro.obs.flight import (
+    FlightEntry, FlightRecorder, validate_flight_jsonl,
+)
 from repro.obs.metrics import (
     Counter, Gauge, Histogram, MetricsRegistry, Reservoir,
     default_registry, percentile, validate_snapshot,
 )
 from repro.obs.probes import (
-    KernelProbe, install_kernel_probe, uninstall_kernel_probe,
+    KernelProbe, dominant_shape_label, install_kernel_probe,
+    uninstall_kernel_probe,
 )
+from repro.obs.regression import (
+    DEFAULT_SPECS, Finding, MetricSpec, Report, WatchEntry, compare,
+)
+from repro.obs.slo import (
+    AccuracyObjective, Alert, DeadlineObjective, LatencyObjective,
+    LoadSignal, Objective, SLOMonitor, StragglerWatch, default_objectives,
+)
+from repro.obs.timeseries import WindowedRollup
 from repro.obs.trace import (
     NULL_TRACER, NullTracer, Span, Tracer, current_tracer, use_tracer,
     validate_trace_jsonl,
 )
 
 __all__ = [
+    "AccuracyObjective",
+    "Alert",
     "Counter",
+    "DEFAULT_SPECS",
+    "DeadlineObjective",
+    "Finding",
+    "FlightEntry",
+    "FlightRecorder",
     "Gauge",
     "Histogram",
     "KernelProbe",
+    "LatencyObjective",
+    "LoadSignal",
+    "MetricSpec",
     "MetricsRegistry",
     "NULL_TRACER",
     "NullTracer",
+    "Objective",
+    "Report",
     "Reservoir",
+    "SLOMonitor",
     "Span",
+    "StragglerWatch",
     "Tracer",
+    "WatchEntry",
+    "WindowedRollup",
+    "compare",
     "current_tracer",
+    "default_objectives",
     "default_registry",
+    "dominant_shape_label",
     "install_kernel_probe",
     "percentile",
     "uninstall_kernel_probe",
     "use_tracer",
+    "validate_flight_jsonl",
     "validate_snapshot",
     "validate_trace_jsonl",
 ]

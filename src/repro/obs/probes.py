@@ -32,7 +32,7 @@ from typing import Any, Callable
 import jax
 
 from repro.kernels import ops as ops_lib
-from repro.obs.metrics import MetricsRegistry, default_registry
+from repro.obs.metrics import MetricsRegistry, default_registry, percentile
 
 try:  # jax >= 0.4.x
     _Tracer = jax.core.Tracer
@@ -52,6 +52,38 @@ def _tree_nbytes(tree: Any) -> int:
     return total
 
 
+def _pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (0 stays 0)."""
+    return 1 << (int(n) - 1).bit_length() if n > 0 else 0
+
+
+def dominant_shape_label(args: tuple) -> str:
+    """Problem-size label for one op call: the largest input array's dims,
+    each rounded up to a power of two.
+
+    The raw shape would be an unbounded label set (every N is its own
+    series); bucketing to powers of two bounds cardinality at ~log(N) per
+    axis while keeping regression comparisons like-for-like — a 10k-point
+    and a 1M-point ``distance_topk`` dispatch never share a series.
+    """
+    best_shape: tuple | None = None
+    best_bytes = -1
+    for leaf in jax.tree_util.tree_leaves(args):
+        shape = getattr(leaf, "shape", None)
+        dtype = getattr(leaf, "dtype", None)
+        if shape is None or dtype is None:
+            continue
+        nbytes = math.prod(shape) * dtype.itemsize
+        if nbytes > best_bytes:
+            best_bytes = nbytes
+            best_shape = shape
+    if best_shape is None:
+        return "scalar"
+    if len(best_shape) == 0:
+        return "scalar"
+    return "x".join(str(_pow2_bucket(d)) for d in best_shape)
+
+
 class KernelProbe:
     """Per-op measured wall time + bytes, recorded into a registry."""
 
@@ -64,20 +96,23 @@ class KernelProbe:
     ):
         self.registry = registry if registry is not None else default_registry()
         self.clock = clock
+        # "shape" is the dominant input's pow2-bucketed dims (bounded
+        # cardinality), so regression comparisons match like-for-like
+        # dispatches instead of averaging a 2k probe into a 1M sweep.
         self._latency = self.registry.reservoir(
             "kernel_latency_s",
             "Measured host wall time per kernel-op call (block_until_ready).",
-            labels=("op", "path"), capacity=capacity,
+            labels=("op", "path", "shape"), capacity=capacity,
         )
         self._bytes = self.registry.counter(
             "kernel_bytes_total",
             "Input+output array bytes moved per kernel op (host-level calls).",
-            labels=("op", "path"),
+            labels=("op", "path", "shape"),
         )
         self._calls = self.registry.counter(
             "kernel_calls_total",
             "Host-level kernel-op calls (in-trace calls are not counted).",
-            labels=("op", "path"),
+            labels=("op", "path", "shape"),
         )
 
     # Called by the ops.py dispatch wrappers.
@@ -93,27 +128,48 @@ class KernelProbe:
         out = jax.block_until_ready(out)
         dt = self.clock() - t0
         path = ops_lib.dispatch_path(kwargs.get("force"))
-        self._latency.labels(op=op, path=path).observe(dt)
-        self._calls.labels(op=op, path=path).inc()
-        self._bytes.labels(op=op, path=path).inc(
+        shape = dominant_shape_label(args)
+        self._latency.labels(op=op, path=path, shape=shape).observe(dt)
+        self._calls.labels(op=op, path=path, shape=shape).inc()
+        self._bytes.labels(op=op, path=path, shape=shape).inc(
             _tree_nbytes(args) + _tree_nbytes(out)
         )
         return out
 
-    def summary(self) -> dict:
-        """{"op[path]": {count, p50_s, mean_s, bytes}} for BENCH embeds."""
-        out: dict = {}
+    def summary(self, *, by_shape: bool = False) -> dict:
+        """Per-dispatch stats for BENCH embeds.
+
+        Default keys are ``"op[path]"`` (shapes pooled — the historical
+        form); ``by_shape=True`` keys ``"op[path][shape]"`` so regression
+        gates compare like-for-like problem sizes.
+        """
         byte_series = {
             tuple(sorted(labels.items())): s.value
             for labels, s in self._bytes.series()
         }
+        grouped: dict[str, dict] = {}
         for labels, s in self._latency.series():
             key = f"{labels['op']}[{labels['path']}]"
+            if by_shape:
+                key += f"[{labels['shape']}]"
+            row = grouped.setdefault(
+                key, {"count": 0, "sum_s": 0.0, "bytes": 0.0, "samples": []}
+            )
+            row["count"] += s.count
+            row["sum_s"] += s.sum
+            row["samples"].extend(s.samples)
+            row["bytes"] += byte_series.get(
+                tuple(sorted(labels.items())), 0.0
+            )
+        out: dict = {}
+        for key, row in grouped.items():
             out[key] = {
-                "count": s.count,
-                "p50_s": s.percentile(50),
-                "mean_s": s.mean,
-                "bytes": byte_series.get(tuple(sorted(labels.items())), 0.0),
+                "count": row["count"],
+                "p50_s": percentile(row["samples"], 50),
+                "mean_s": (
+                    row["sum_s"] / row["count"] if row["count"] else math.nan
+                ),
+                "bytes": row["bytes"],
             }
         return out
 

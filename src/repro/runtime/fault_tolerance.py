@@ -84,6 +84,8 @@ class Supervisor:
         save_every: int = 50,
         injector: FailureInjector | None = None,
         budget_policy: BudgetPolicy | None = None,
+        watch=None,
+        clock: Callable[[], float] = time.monotonic,
     ):
         self.ckpt = ckpt
         self.save_every = save_every
@@ -92,6 +94,10 @@ class Supervisor:
         self.heartbeats: dict[int, Heartbeat] = {}
         self.restarts = 0
         self.straggler_events: list[tuple[int, float]] = []
+        # Optional repro.obs.slo.StragglerWatch: each step's measured wall
+        # time feeds per-shard latency/skew gauges and straggler alerts.
+        self.watch = watch
+        self.clock = clock
 
     # ------------------------------------------------------------------
     def run(
@@ -130,11 +136,23 @@ class Supervisor:
                 eps = self.budget.shard_eps(model, 10_000, 0.5)
                 self.straggler_events.append((step, eps))
                 emit_shard_event("straggling", 0, step, eps=eps)
+                # Meter the shrunk grant so the degraded-accuracy knob is a
+                # dashboard series, not only a span attribute.
+                default_registry().gauge(
+                    "runtime_straggler_eps",
+                    "Refinement eps granted to a straggling shard "
+                    "(approximation-based mitigation).",
+                    labels=("shard",),
+                ).labels(shard=0).set(eps)
                 self.injector.fail_steps.pop(step, None)
 
+            t0 = self.clock()
             state = step_fn(state, step)
+            dt = self.clock() - t0
             hb = self.heartbeats.setdefault(0, Heartbeat(shard=0))
             hb.beat(step)
+            if self.watch is not None:
+                self.watch.beat(0, step, dt)
             step += 1
             if step % self.save_every == 0 or step == num_steps:
                 self.ckpt.save(

@@ -54,6 +54,7 @@ class DeadlineController:
         eps_grid: tuple[float, ...] = EPS_GRID,
         safety: float = 0.9,
         ema: float = 0.3,
+        load_signal=None,
     ):
         self.policy = policy or BudgetPolicy()
         # eps_max must be on the grid so full-eps grants (re-execution,
@@ -61,6 +62,11 @@ class DeadlineController:
         self.eps_grid = tuple(sorted(set(eps_grid) | {self.policy.eps_max}))
         self.safety = safety          # fraction of the budget we dare plan for
         self.ema = ema                # weight of each new observed/predicted ratio
+        # Optional repro.obs.slo.LoadSignal: when set, the correction is a
+        # windowed quantile of recent observed/predicted ratios instead of
+        # the per-batch EMA (one outlier ages out of the window instead of
+        # decaying through every later grant).
+        self.load_signal = load_signal
         self.models: dict[str, CostModel] = {}
         self._correction: dict[str, float] = {}
 
@@ -148,13 +154,20 @@ class DeadlineController:
         return needed * corr / self.safety
 
     def observe(self, kind: str, predicted_s: float, observed_s: float) -> None:
-        """EMA-correct the model from one batch's actual wall time.
+        """Correct the model from one batch's actual wall time.
 
-        Each update's ratio is clamped so a single outlier batch (GC pause,
-        page fault, a compile the server failed to filter) cannot blow up
-        the correction; persistent drift still converges.
+        With a ``load_signal`` attached the batch's observed/predicted pair
+        feeds the windowed quantile and the correction is read back from
+        it.  Otherwise the original EMA path: each update's ratio is
+        clamped so a single outlier batch (GC pause, page fault, a compile
+        the server failed to filter) cannot blow up the correction;
+        persistent drift still converges.
         """
         if predicted_s <= 0.0 or observed_s <= 0.0:
+            return
+        if self.load_signal is not None:
+            self.load_signal.observe(kind, predicted_s, observed_s)
+            self._correction[kind] = self.load_signal.correction(kind)
             return
         ratio = min(max(observed_s / predicted_s, 0.25), 4.0)
         old = self._correction.get(kind, 1.0)

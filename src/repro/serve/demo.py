@@ -28,9 +28,15 @@ KNN_D, CF_ITEMS, N_CLASSES = 48, 384, 10
 
 def build_demo_server(
     *, knn_points: int = 16_384, cf_users: int = 3_072, batch: int = 4,
+    **server_kwargs,
 ):
     """Server over synthetic kNN + CF shards; returns (server, queries,
-    active, active_mask)."""
+    active, active_mask).
+
+    Extra keyword arguments (``tracer``, ``window_s``, ``slo_objectives``,
+    ``flight``, ...) pass straight through to ``Server`` so the example and
+    the benchmark can opt into observability without forking the fixture.
+    """
     key = jax.random.PRNGKey(0)
     # One aggregate store shared by both shards: pyramids, cross-ratio
     # merges, and snapshot/warm-start all live in one place.
@@ -58,6 +64,7 @@ def build_demo_server(
         [knn, cf],
         controller=DeadlineController(policy),
         batcher=ContinuousBatcher(max_batch=batch, pad_sizes=(batch,)),
+        **server_kwargs,
     )
     return server, x[:64], ratings[:8] * mask[:8], mask[:8]
 

@@ -21,10 +21,12 @@ must never share counters.  ``snapshot()``/``to_prometheus()`` export it.
 from __future__ import annotations
 
 import math
-from typing import Sequence
+import time
+from typing import Callable, Sequence
 
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.metrics import percentile as _percentile
+from repro.obs.timeseries import WindowedRollup
 from repro.serve.request import Response
 
 # Per-series retained samples; exact stats are kept regardless (algorithm R).
@@ -56,8 +58,22 @@ class ServeMetrics:
     ``deadline_met_rate``.
     """
 
-    def __init__(self, *, capacity: int = RESERVOIR_CAPACITY):
+    def __init__(
+        self,
+        *,
+        capacity: int = RESERVOIR_CAPACITY,
+        window_s: float | None = None,
+        max_windows: int = 64,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
         self.registry = MetricsRegistry()
+        # Optional time axis: lifetime reservoirs answer "since startup",
+        # the rollup answers "in the last N seconds" (the SLO monitor's
+        # input).  Off by default — a server without window_s pays nothing.
+        self.rollup: WindowedRollup | None = (
+            WindowedRollup(window_s, max_windows=max_windows, clock=clock)
+            if window_s is not None else None
+        )
         r = self.registry
         self._responses = r.counter(
             "serve_responses_total", "Responses emitted (incl. re-executions).",
@@ -123,19 +139,20 @@ class ServeMetrics:
     # ------------------------------------------------------------------
     def record(self, response: Response) -> None:
         kind = response.kind
+        roll = self.rollup
+        stage1_ms = response.stage1_latency_s * 1e3
+        total_ms = response.total_latency_s * 1e3
         self._responses.labels(kind=kind).inc()
-        self._stage1_ms.labels(kind=kind).observe(
-            response.stage1_latency_s * 1e3
-        )
-        self._total_ms.labels(kind=kind).observe(
-            response.total_latency_s * 1e3
-        )
+        self._stage1_ms.labels(kind=kind).observe(stage1_ms)
+        self._total_ms.labels(kind=kind).observe(total_ms)
         self._eps.labels(kind=kind).observe(response.eps_granted)
         if response.refined is not None:
             self._refined.labels(kind=kind).inc()
         proxy = getattr(response, "accuracy_proxy", None)
         if proxy is not None:
             self._accuracy.labels(kind=kind).observe(proxy)
+            if roll is not None:
+                roll.observe("accuracy_proxy", proxy)
         if response.reexecuted:
             self._reexecutions.labels(kind=kind).inc()
             return
@@ -145,6 +162,19 @@ class ServeMetrics:
             self._deadline_met.labels(kind=kind, slo=slo).inc()
         if response.escalated:
             self._escalated.labels(kind=kind).inc()
+        if roll is not None:
+            # Window the SLO-relevant streams for first executions only —
+            # same re-execution rule as the lifetime rates above.
+            roll.observe("stage1_ms", stage1_ms)
+            roll.observe(f"stage1_ms[{slo}]", stage1_ms)
+            roll.observe("total_ms", total_ms)
+            roll.count("requests")
+            roll.count(f"requests[{slo}]")
+            if response.deadline_met:
+                roll.count("deadline_met")
+                roll.count(f"deadline_met[{slo}]")
+            if response.escalated:
+                roll.count("escalated")
 
     def record_batch(
         self, shuffle_bytes: int, occupancy: int = 0,
@@ -159,6 +189,39 @@ class ServeMetrics:
     def reset(self) -> None:
         """Drop all records (e.g. after a jit/cache warmup phase)."""
         self.registry.reset()
+        if self.rollup is not None:
+            self.rollup = WindowedRollup(
+                self.rollup.window_s,
+                max_windows=self.rollup.max_windows,
+                clock=self.rollup.clock,
+            )
+
+    def windowed(self, windows: int = 10) -> dict:
+        """Recent-window view: 'last N windows' rates and percentiles next
+        to the lifetime stats (requires ``window_s``)."""
+        roll = self.rollup
+        if roll is None:
+            raise RuntimeError("ServeMetrics built without window_s")
+        span_s = windows * roll.window_s
+        requests = roll.total("requests", windows)
+        met = roll.total("deadline_met", windows)
+        return {
+            "span_s": span_s,
+            "requests": requests,
+            "request_rate": roll.rate("requests", windows),
+            "deadline_met_rate": (
+                met / requests if requests else math.nan
+            ),
+            "escalated": roll.total("escalated", windows),
+            "stage1_latency_ms": {
+                "p50": roll.quantile("stage1_ms", 50, windows=windows),
+                "p99": roll.quantile("stage1_ms", 99, windows=windows),
+            },
+            "total_latency_ms": {
+                "p50": roll.quantile("total_ms", 50, windows=windows),
+                "p99": roll.quantile("total_ms", 99, windows=windows),
+            },
+        }
 
     # --- back-compat accessors (pre-registry attribute API) ---
     @property
@@ -238,4 +301,6 @@ class ServeMetrics:
                 )
         if store_stats is not None:
             out["store"] = list(store_stats)
+        if self.rollup is not None:
+            out["windowed"] = self.windowed()
         return out

@@ -29,6 +29,8 @@ import jax
 
 from repro.core.budget import BudgetPolicy
 from repro.core.refine import eps_to_budget
+from repro.obs.flight import FlightRecorder
+from repro.obs.slo import LoadSignal, Objective, SLOMonitor
 from repro.obs.trace import NULL_TRACER, NullTracer, Tracer, use_tracer
 from repro.serve.cache import AggregateCache
 from repro.serve.deadline import DeadlineController
@@ -53,6 +55,9 @@ class Server:
         cache: AggregateCache | None = None,
         clock: Callable[[], float] = time.perf_counter,
         tracer: Tracer | NullTracer | None = None,
+        window_s: float | None = None,
+        slo_objectives: Iterable[Objective] | None = None,
+        flight: FlightRecorder | None = None,
     ):
         self.servables: dict[str, Servable] = {s.name: s for s in servables}
         if not self.servables:
@@ -60,14 +65,31 @@ class Server:
         if policy is not None and controller is not None:
             raise ValueError("pass either policy or controller, not both")
         self.controller = controller or DeadlineController(policy)
-        self.batcher = batcher or ContinuousBatcher()
-        self.cache = cache or AggregateCache()
-        self.metrics = ServeMetrics()
+        # `is None`, not `or`: an empty ContinuousBatcher is falsy (len 0),
+        # so `batcher or ...` would silently discard a caller's batcher.
+        self.batcher = batcher if batcher is not None else ContinuousBatcher()
+        self.cache = cache if cache is not None else AggregateCache()
+        self.metrics = ServeMetrics(window_s=window_s, clock=clock)
         self.clock = clock
         # Span-tree recorder for the whole batch path (repro.obs).  The
         # default NULL_TRACER no-ops every call, so an un-observed server
         # pays nothing; pass obs.Tracer(clock=...) to record.
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # Closed observability loop, all opt-in via window_s: the metrics
+        # rollup feeds an SLOMonitor (burn-rate alerts into the default
+        # registry + this batch's trace), the controller's cost correction
+        # becomes a windowed LoadSignal quantile, and a FlightRecorder
+        # keeps full span trees for SLO-missed/escalated/tail batches.
+        self.slo: SLOMonitor | None = None
+        if window_s is not None and slo_objectives is not None:
+            self.slo = SLOMonitor(
+                self.metrics.rollup, list(slo_objectives), clock=clock
+            )
+        if window_s is not None and self.controller.load_signal is None:
+            self.controller.load_signal = LoadSignal(
+                window_s=window_s, clock=clock
+            )
+        self.flight = flight
         # (kind, padded_size, refine_budget) combos already executed once:
         # first executions pay jit compile, so their wall time must not
         # feed the controller's cost correction.
@@ -186,7 +208,14 @@ class Server:
         # layers (MapReduce engine, aggregate store) attach their spans to
         # this batch's tree without a parameter threading through.
         with use_tracer(self.tracer):
-            return self._execute_batch(batch)
+            responses = self._execute_batch(batch)
+        # Flight recording needs the *closed* root span (duration, full
+        # tree), so it happens after the batch span has been finished.
+        if self.flight is not None and self.tracer.enabled:
+            traces = self.tracer.traces()
+            if traces:
+                self.flight.record(traces[-1], responses)
+        return responses
 
     def _execute_batch(self, batch: ScheduledBatch) -> list[Response]:
         servable = self.servables[batch.kind]
@@ -324,6 +353,10 @@ class Server:
                 self.metrics.record(resp)
                 if grant.escalate and not req.reexecution:
                     self._requeue_for_reexecution(req)
+            if self.slo is not None:
+                # Evaluate inside the batch span so alert transitions land
+                # as slo.alert events on this batch's tree.
+                self.slo.evaluate()
             return responses
 
     def _requeue_for_reexecution(self, req: Request) -> None:
