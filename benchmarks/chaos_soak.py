@@ -1,0 +1,237 @@
+"""Chaos soak: sustained load through the front door with an overload
+phase and one killed shard — the graceful-degradation curve as BENCH json.
+
+Three phases over a sharded kNN fleet behind ``FrontDoor`` (pump mode, so
+the run is deterministic):
+
+  1. **healthy** — open-loop waves at a comfortably meetable deadline;
+  2. **overload** — submits arrive faster than pumping serves them: the
+     load-shed ladder must walk down (fleet-wide eps degradation) before
+     the first typed ``Overloaded`` rejection;
+  3. **fault** — one shard is killed mid-run: batches complete from the
+     survivors (``partial_shards`` answers), the shard restores from its
+     aggregate snapshot, and the fleet heals.
+
+The BENCH json proves the paper's degrade-not-collapse contract:
+
+  * stage-1 deadline-met rate in the overload and fault phases stays
+    >= 0.9x the healthy rate (``BENCH_FAIL`` otherwise);
+  * every submitted rid has a terminal answer — degraded and rejected
+    responses are answers, silent drops fail the run;
+  * shed-before-reject ordering holds (first ladder step strictly before
+    the first rejection).
+
+    PYTHONPATH=src python -m benchmarks.chaos_soak
+    REPRO_BENCH_TINY=1 ...   # CI smoke sizes
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.budget import BudgetPolicy
+from repro.obs.metrics import percentile
+from repro.runtime import ChaosInjector, sharded_knn
+from repro.serve import (
+    ContinuousBatcher, DeadlineController, FrontDoor, Overloaded, Response,
+    Server,
+)
+
+TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
+N_POINTS = 2_048 if TINY else 8_192
+DIM, CLASSES, SHARDS = 16, 10, 4
+WAVE = 4                       # submits per wave == batch == pad size
+HEALTHY_WAVES = 4 if TINY else 12
+FAULT_WAVES = 6 if TINY else 16
+OVERLOAD_SUBMITS = 40 if TINY else 96
+QUEUE_LIMIT = 8
+MIN_RATIO = 0.9                # acceptance floor for degraded/healthy rate
+
+
+def _phase_stats(results: list) -> dict:
+    served = [r for r in results if isinstance(r, Response)]
+    rejected = [r for r in results if isinstance(r, Overloaded)]
+    met = sum(1 for r in served if r.deadline_met)
+    lat = [r.stage1_latency_s * 1e3 for r in served]
+    eps = [r.eps_granted for r in served]
+    partial = sum(1 for r in served if r.partial_shards)
+    proxies = [
+        r.accuracy_proxy for r in served if r.accuracy_proxy is not None
+    ]
+    return {
+        "submitted": len(results),
+        "served": len(served),
+        "rejected": len(rejected),
+        "unanswered": sum(1 for r in results if r is None),
+        "deadline_met_rate": met / len(served) if served else math.nan,
+        "stage1_p50_ms": percentile(lat, 50),
+        "stage1_p99_ms": percentile(lat, 99),
+        "eps_mean": float(np.mean(eps)) if eps else math.nan,
+        "partial_responses": partial,
+        "accuracy_proxy_mean": (
+            float(np.mean(proxies)) if proxies else math.nan
+        ),
+    }
+
+
+def run():
+    rng = np.random.default_rng(0)
+    x = jax.numpy.asarray(
+        rng.normal(size=(N_POINTS, DIM)), jax.numpy.float32
+    )
+    y = jax.numpy.asarray(
+        rng.integers(0, CLASSES, size=N_POINTS), jax.numpy.int32
+    )
+    queries = jax.numpy.asarray(
+        rng.normal(size=(256, DIM)), jax.numpy.float32
+    )
+
+    chaos = ChaosInjector(seed=7)
+    snapshot_dir = tempfile.mkdtemp(prefix="chaos_soak_snap_")
+    fleet = sharded_knn(
+        x, y, n_shards=SHARDS, n_classes=CLASSES, k=5,
+        lsh_key=jax.random.PRNGKey(11), chaos=chaos,
+        recovery_batches=2, snapshot_dir=snapshot_dir,
+    )
+    controller = DeadlineController(
+        BudgetPolicy(compression_ratio=16.0, eps_max=0.08,
+                     degrade_floor=0.002)
+    )
+    server = Server(
+        [fleet], controller=controller,
+        batcher=ContinuousBatcher(max_batch=WAVE),
+    )
+    server.calibrate("knn", batch=WAVE)
+    server.prewarm("knn", batch=WAVE)
+    fleet.save_snapshot(snapshot_dir)  # the fault phase's recovery source
+
+    # A deadline the warmed pipeline meets with wide margin: the measured
+    # cost of a full-eps batch, with headroom for overload queue waits.
+    t_full = controller.deadline_for("knn", fleet.n_points, 0.08)
+    deadline_s = max(20.0 * t_full, 0.05)
+
+    fd = FrontDoor(
+        server, queue_limit=QUEUE_LIMIT, default_deadline_s=deadline_s
+    )
+    server.reset_metrics()
+
+    def submit_wave(offset):
+        return [
+            fd.submit("knn", (queries[(offset + i) % queries.shape[0]],))
+            for i in range(WAVE)
+        ]
+
+    def drain():
+        while fd.backlog():
+            fd.pump(max_batches=4)
+
+    # ---- phase 1: healthy ----
+    healthy_rids = []
+    for w in range(HEALTHY_WAVES):
+        healthy_rids += submit_wave(w * WAVE)
+        fd.pump(max_batches=4)
+    drain()
+
+    # ---- phase 2: overload (submits outpace pumping) ----
+    overload_rids = []
+    for burst in range(OVERLOAD_SUBMITS // WAVE):
+        overload_rids += submit_wave(burst * WAVE)
+        if burst % 3 == 2:  # pump far less often than we submit
+            fd.pump(max_batches=1)
+    drain()
+    overload_stats_fd = fd.stats()
+    # let the ladder walk back up before the fault phase
+    for _ in range(len(fd.ladder.factors) + 2):
+        fd.pump()
+
+    # ---- phase 3: one shard killed mid-run ----
+    chaos.kill(1, fleet.step)
+    fault_rids = []
+    for w in range(FAULT_WAVES):
+        fault_rids += submit_wave(w * WAVE)
+        fd.pump(max_batches=4)
+    drain()
+
+    phases = {
+        "healthy": _phase_stats([fd.result(r) for r in healthy_rids]),
+        "overload": _phase_stats([fd.result(r) for r in overload_rids]),
+        "fault": _phase_stats([fd.result(r) for r in fault_rids]),
+    }
+    healthy_rate = phases["healthy"]["deadline_met_rate"]
+    under_overload = phases["overload"]["deadline_met_rate"] / healthy_rate
+    under_fault = phases["fault"]["deadline_met_rate"] / healthy_rate
+    all_rids = healthy_rids + overload_rids + fault_rids
+    answered = sum(1 for r in all_rids if fd.result(r) is not None)
+
+    summary = {
+        "n_points": N_POINTS,
+        "n_shards": SHARDS,
+        "deadline_s": deadline_s,
+        "phases": phases,
+        "deadline_met_healthy": healthy_rate,
+        "deadline_met_under_overload_ratio": under_overload,
+        "deadline_met_under_fault_ratio": under_fault,
+        "answered_fraction": answered / len(all_rids),
+        "shed_before_reject": float(
+            overload_stats_fd["shed_before_reject"]
+        ),
+        "max_shed_level": max(
+            [t["to"] for t in overload_stats_fd["shed_transitions"]],
+            default=0,
+        ),
+        "rejected_overload": overload_stats_fd["rejected"]["overload"],
+        "fleet": fleet.summary(),
+        "frontdoor": {
+            k: overload_stats_fd[k]
+            for k in ("admitted", "rejected", "shed_transitions")
+        },
+    }
+    print("BENCH " + json.dumps({"chaos_soak": summary}))
+    emit(
+        "chaos_soak_fault_ratio", under_fault * 1e6,
+        f"overload_ratio={under_overload:.3f};"
+        f"answered={summary['answered_fraction']:.3f};"
+        f"rejected={summary['rejected_overload']};"
+        f"kills={summary['fleet']['kills']};"
+        f"recoveries={summary['fleet']['recoveries']}",
+    )
+
+    # ---- degradation-curve guards (CI fails on any) ----
+    if summary["answered_fraction"] < 1.0:
+        print("BENCH_FAIL,chaos_soak:submitted rids went unanswered")
+    if under_fault < MIN_RATIO:
+        print(
+            "BENCH_FAIL,chaos_soak:deadline-met under fault "
+            f"{under_fault:.3f} < {MIN_RATIO}x healthy"
+        )
+    if under_overload < MIN_RATIO:
+        print(
+            "BENCH_FAIL,chaos_soak:deadline-met under overload "
+            f"{under_overload:.3f} < {MIN_RATIO}x healthy"
+        )
+    if not overload_stats_fd["shed_before_reject"]:
+        print("BENCH_FAIL,chaos_soak:rejected before shedding")
+    if summary["fleet"]["kills"] < 1 or summary["fleet"]["recoveries"] < 1:
+        print("BENCH_FAIL,chaos_soak:fault phase killed/recovered no shard")
+    if phases["fault"]["partial_responses"] < 1:
+        print("BENCH_FAIL,chaos_soak:no partial (degraded) answers emitted")
+    return summary
+
+
+if __name__ == "__main__":
+    import sys
+
+    s = run()
+    ok = (
+        s["answered_fraction"] >= 1.0
+        and s["deadline_met_under_fault_ratio"] >= MIN_RATIO
+        and s["deadline_met_under_overload_ratio"] >= MIN_RATIO
+        and s["shed_before_reject"] == 1.0
+    )
+    sys.exit(0 if ok else 1)

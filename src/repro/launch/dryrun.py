@@ -493,7 +493,7 @@ def run_all(meshes=("single", "multi"), archs=None, shapes=None,
     """Drive every cell in a fresh subprocess; resumable."""
     from repro.configs import ARCH_NAMES
     archs = archs or ARCH_NAMES
-    shapes = shapes or list(SHAPES)
+    shapes = shapes if shapes is not None else list(SHAPES)
     failures = []
     for mesh_tag in meshes:
         for arch in archs:
@@ -522,7 +522,7 @@ def run_all(meshes=("single", "multi"), archs=None, shapes=None,
 def run_all_calibration(archs=None, shapes=None, skip_existing=True):
     from repro.configs import ARCH_NAMES
     archs = archs or ARCH_NAMES
-    shapes = shapes or list(SHAPES)
+    shapes = shapes if shapes is not None else list(SHAPES)
     failures = []
     for arch in archs:
         for shape in shapes:

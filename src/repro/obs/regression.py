@@ -76,6 +76,18 @@ DEFAULT_SPECS: tuple[MetricSpec, ...] = (
                "higher", tolerance=0.01),
     MetricSpec("store_reuse.merge_speedup",
                "higher", tolerance=0.35, absolute=0.5),
+    # Graceful-degradation contract (benchmarks/chaos_soak.py): deadline
+    # attainment under one killed shard relative to the healthy phase,
+    # shed-strictly-before-reject ordering, and zero silent drops.  These
+    # are near-boolean curves — small absolute bands, no relative slack.
+    MetricSpec("chaos_soak.deadline_met_under_fault_ratio",
+               "higher", tolerance=0.0, absolute=0.05),
+    MetricSpec("chaos_soak.deadline_met_under_overload_ratio",
+               "higher", tolerance=0.0, absolute=0.05),
+    MetricSpec("chaos_soak.shed_before_reject",
+               "higher", tolerance=0.0),
+    MetricSpec("chaos_soak.answered_fraction",
+               "higher", tolerance=0.0),
 )
 
 

@@ -89,8 +89,13 @@ class Supervisor:
     ):
         self.ckpt = ckpt
         self.save_every = save_every
-        self.injector = injector or FailureInjector()
-        self.budget = budget_policy or BudgetPolicy()
+        # `is None`, not `or`: a FailureInjector with no scheduled failures
+        # is indistinguishable from one the caller passed (and a falsy
+        # BudgetPolicy subclass would be silently dropped).
+        self.injector = injector if injector is not None else FailureInjector()
+        self.budget = (
+            budget_policy if budget_policy is not None else BudgetPolicy()
+        )
         self.heartbeats: dict[int, Heartbeat] = {}
         self.restarts = 0
         self.straggler_events: list[tuple[int, float]] = []
@@ -98,6 +103,22 @@ class Supervisor:
         # time feeds per-shard latency/skew gauges and straggler alerts.
         self.watch = watch
         self.clock = clock
+
+    # ------------------------------------------------------------------
+    def dead_shards(self, timeout_s: float, now: float | None = None) -> list[int]:
+        """Shards whose last heartbeat is older than ``timeout_s``.
+
+        Staleness-based liveness: a shard whose beats are dropped (chaos
+        ``drop_heartbeat``) or that died goes stale here even though it
+        never reported failure.  Marks stale heartbeats ``alive=False``.
+        """
+        now = now if now is not None else time.monotonic()
+        dead = []
+        for shard, hb in sorted(self.heartbeats.items()):
+            if hb.step >= 0 and now - hb.t_last > timeout_s:
+                hb.alive = False
+                dead.append(shard)
+        return dead
 
     # ------------------------------------------------------------------
     def run(
@@ -108,6 +129,7 @@ class Supervisor:
         start_step: int = 0,
         num_steps: int = 100,
         state_template: Any = None,
+        shard: int = 0,
     ) -> tuple[Any, dict]:
         """Drive ``step_fn`` with failure recovery.
 
@@ -115,6 +137,12 @@ class Supervisor:
         the supervisor restores the latest checkpoint and resumes from the
         recorded step (possibly re-sharded by the caller via the restored
         extra metadata).
+
+        ``shard`` is this worker's failure-domain identity: heartbeats,
+        straggler events, and the ``runtime_straggler_eps`` gauge all carry
+        it, so multi-shard telemetry is real (one Supervisor per shard
+        sharing the default registry yields per-shard series, not N
+        overwrites of shard 0).
         """
         step = start_step
         while step < num_steps:
@@ -135,7 +163,7 @@ class Supervisor:
                 model = CostModel(c_stage1=1e-6, c_stage2=1e-6)
                 eps = self.budget.shard_eps(model, 10_000, 0.5)
                 self.straggler_events.append((step, eps))
-                emit_shard_event("straggling", 0, step, eps=eps)
+                emit_shard_event("straggling", shard, step, eps=eps)
                 # Meter the shrunk grant so the degraded-accuracy knob is a
                 # dashboard series, not only a span attribute.
                 default_registry().gauge(
@@ -143,16 +171,16 @@ class Supervisor:
                     "Refinement eps granted to a straggling shard "
                     "(approximation-based mitigation).",
                     labels=("shard",),
-                ).labels(shard=0).set(eps)
+                ).labels(shard=shard).set(eps)
                 self.injector.fail_steps.pop(step, None)
 
             t0 = self.clock()
             state = step_fn(state, step)
             dt = self.clock() - t0
-            hb = self.heartbeats.setdefault(0, Heartbeat(shard=0))
+            hb = self.heartbeats.setdefault(shard, Heartbeat(shard=shard))
             hb.beat(step)
             if self.watch is not None:
-                self.watch.beat(0, step, dt)
+                self.watch.beat(shard, step, dt)
             step += 1
             if step % self.save_every == 0 or step == num_steps:
                 self.ckpt.save(

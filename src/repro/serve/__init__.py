@@ -54,11 +54,20 @@ Workloads implement the small ``Servable`` protocol (repro.serve.request);
 ``repro.apps.knn.KNNServable`` and ``repro.apps.cf.CFServable`` are the two
 shipped instances, and aggregated-KV decode steps fit the same contract
 (the bucketed KV cache is the "dataset shard", a decode step the query).
+
+Robustness: ``repro.serve.frontdoor.FrontDoor`` puts admission control in
+front of this loop — per-tenant token-bucket quotas, a bounded admission
+queue, and a load-shed ladder that degrades eps fleet-wide before the
+first typed ``Overloaded`` refusal; ``repro.runtime.shards`` fans each
+batch over N failure domains (see ``Response.partial_shards``).
 """
 from repro.serve.cache import AggregateCache
 from repro.serve.deadline import DeadlineController, Grant
+from repro.serve.frontdoor import (
+    FrontDoor, LoadShedLadder, TenantSpec, TokenBucket,
+)
 from repro.serve.metrics import ServeMetrics, percentile
-from repro.serve.request import Request, Response, Servable
+from repro.serve.request import Overloaded, Request, Response, Servable
 from repro.serve.scheduler import ContinuousBatcher, ScheduledBatch
 from repro.serve.server import Server
 
@@ -66,12 +75,17 @@ __all__ = [
     "AggregateCache",
     "ContinuousBatcher",
     "DeadlineController",
+    "FrontDoor",
     "Grant",
+    "LoadShedLadder",
+    "Overloaded",
     "Request",
     "Response",
     "ScheduledBatch",
     "Servable",
     "ServeMetrics",
     "Server",
+    "TenantSpec",
+    "TokenBucket",
     "percentile",
 ]

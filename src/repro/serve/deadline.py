@@ -56,7 +56,7 @@ class DeadlineController:
         ema: float = 0.3,
         load_signal=None,
     ):
-        self.policy = policy or BudgetPolicy()
+        self.policy = policy if policy is not None else BudgetPolicy()
         # eps_max must be on the grid so full-eps grants (re-execution,
         # uncalibrated startup) are not silently snapped down.
         self.eps_grid = tuple(sorted(set(eps_grid) | {self.policy.eps_max}))

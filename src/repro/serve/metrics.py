@@ -113,6 +113,12 @@ class ServeMetrics:
             "serve_batch_occupancy_total",
             "Real (un-padded) requests packed into executed batches.",
         )
+        self._partial = r.counter(
+            "serve_partial_total",
+            "Responses merged from surviving failure domains only "
+            "(degraded, not error).",
+            labels=("kind",),
+        )
         self._cache_source = r.counter(
             "serve_cache_source_total",
             "Aggregate lookups by source (hit/built/merged/restored).",
@@ -148,6 +154,10 @@ class ServeMetrics:
         self._eps.labels(kind=kind).observe(response.eps_granted)
         if response.refined is not None:
             self._refined.labels(kind=kind).inc()
+        if getattr(response, "partial_shards", ()):
+            self._partial.labels(kind=kind).inc()
+            if roll is not None:
+                roll.count("partial")
         proxy = getattr(response, "accuracy_proxy", None)
         if proxy is not None:
             self._accuracy.labels(kind=kind).observe(proxy)
@@ -282,6 +292,9 @@ class ServeMetrics:
                 self._occupancy.value / n_batches if n_batches else math.nan
             ),
         }
+        n_partial = int(self._partial.total())
+        if n_partial:
+            out["partial_rate"] = n_partial / n_all
         if acc["count"]:
             out["accuracy_proxy"] = {
                 "n": acc["count"],

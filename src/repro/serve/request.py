@@ -12,6 +12,23 @@ scheduler.  It deliberately mirrors the offline Algorithm-1 decomposition:
 ``build`` produces the cacheable aggregates for one compression ratio (the
 expensive LSH + segment-sum pass), ``run`` executes the two-stage map +
 combine for a fixed-shape query batch at a static ``refine_budget``.
+
+The answer contract (what a caller may receive for one submitted rid)
+----------------------------------------------------------------------
+Every admitted-or-rejected rid gets exactly one terminal answer; silent
+drops are bugs, degraded answers are not:
+
+  * ``Response`` with ``refined`` set — the full two-stage answer;
+  * ``Response`` stage-1 only — the anytime degraded answer (budget ran
+    out before stage 2);
+  * ``Response`` with ``partial_shards`` non-empty — merged from the
+    surviving failure domains only (a shard died or was still
+    recovering); *degraded, not an error*: ``stage1``/``refined`` are
+    real answers over K-1 shards' data;
+  * ``Overloaded`` — the front door refused admission (tenant quota
+    exhausted, or the load-shed ladder is maxed and the admission queue
+    full).  Carries ``retry_after_s``; the request never entered the
+    batcher.
 """
 from __future__ import annotations
 
@@ -61,11 +78,45 @@ class Response:
     # Stage-1 vs refined divergence (0.0 = refinement changed nothing);
     # None when stage 2 didn't run or the servable can't compute it.
     accuracy_proxy: float | None = None
+    # Failure domains absent from this answer (dead or still recovering).
+    # Non-empty means the answer was merged from the surviving shards only:
+    # a *degraded* answer under the anytime contract, never an error.
+    partial_shards: tuple[int, ...] = ()
 
     @property
     def answer(self) -> Any:
         """Best available answer (the anytime contract)."""
         return self.refined if self.refined is not None else self.stage1
+
+    @property
+    def degraded(self) -> bool:
+        """Answer is missing refinement or whole failure domains."""
+        return self.refined is None or bool(self.partial_shards)
+
+
+@dataclasses.dataclass(frozen=True)
+class Overloaded:
+    """Typed refusal from the front door — an answer, not an exception.
+
+    Emitted only after fleet-wide eps degradation has been exhausted (for
+    ``reason="overload"``: the load-shed ladder is at its deepest level
+    *and* the bounded admission queue is full) or when a tenant is out of
+    token-bucket quota (``reason="quota"`` — per-tenant contract, does not
+    consult fleet load).  The request never entered the batcher; the
+    caller should back off ``retry_after_s`` seconds and resubmit.
+    """
+
+    rid: int
+    kind: str
+    tenant: str
+    reason: str                  # "quota" | "overload"
+    retry_after_s: float
+    shed_level: int = 0          # ladder depth at refusal time
+
+    @property
+    def answer(self) -> None:
+        """Uniform surface with ``Response.answer`` (always None here)."""
+        return None
 
 
 @runtime_checkable

@@ -68,7 +68,7 @@ class LSHServableBase:
         )
         self.n_hashes = n_hashes
         self.bucket_width = bucket_width
-        self.engine = engine or engine_lib.MapReduce()
+        self.engine = engine if engine is not None else engine_lib.MapReduce()
         self.n_points = int(data_arrays[0].shape[0])
         # Cheap shard fingerprint: shape, dtype, and a *position-weighted*
         # checksum per array — a plain sum would be permutation-invariant,
@@ -77,8 +77,9 @@ class LSHServableBase:
         self._fingerprint = tuple(
             (a.shape, str(a.dtype), _checksum(a)) for a in data_arrays
         )
-        self.pyramid_spec = pyramid_spec or PyramidSpec.for_points(
-            self.n_points
+        self.pyramid_spec = (
+            pyramid_spec if pyramid_spec is not None
+            else PyramidSpec.for_points(self.n_points)
         )
         # The store owns aggregate lifecycle (pyramid reuse, persistence);
         # a private store per servable unless one is shared across shards.

@@ -64,7 +64,9 @@ class Server:
             raise ValueError("need at least one servable")
         if policy is not None and controller is not None:
             raise ValueError("pass either policy or controller, not both")
-        self.controller = controller or DeadlineController(policy)
+        self.controller = (
+            controller if controller is not None else DeadlineController(policy)
+        )
         # `is None`, not `or`: an empty ContinuousBatcher is falsy (len 0),
         # so `batcher or ...` would silently discard a caller's batcher.
         self.batcher = batcher if batcher is not None else ContinuousBatcher()
@@ -195,11 +197,24 @@ class Server:
             return []
         return self._execute(batch)
 
-    def drain(self) -> list[Response]:
-        """Run until the queue (including escalation re-runs) is empty."""
+    def drain(self, max_steps: int = 10_000) -> list[Response]:
+        """Run until the queue (including escalation re-runs) is empty.
+
+        ``max_steps`` bounds the loop: re-execution batches never
+        re-escalate (pinned by test), so the queue shrinks monotonically —
+        but a pathological controller must hit a loud RuntimeError, not
+        spin forever.
+        """
         out: list[Response] = []
+        steps = 0
         while len(self.batcher):
+            if steps >= max_steps:
+                raise RuntimeError(
+                    f"drain exceeded max_steps={max_steps} with "
+                    f"{len(self.batcher)} requests still queued"
+                )
             out.extend(self.step())
+            steps += 1
         return out
 
     # ------------------------------------------------------------------
@@ -250,6 +265,16 @@ class Server:
                     eps=grant.eps, ratio=grant.compression_ratio,
                     refine_budget=grant.refine_budget,
                     escalate=grant.escalate, predicted_s=grant.predicted_s,
+                )
+
+            # Deadline propagation into the failure domains: a sharded
+            # servable derives per-shard timeouts (straggler eps-shrink)
+            # and its hedging headroom from the batch's remaining budget.
+            deadline_hook = getattr(servable, "on_batch_deadline", None)
+            if deadline_hook is not None:
+                deadline_hook(
+                    float("inf") if reexecution
+                    else batch.min_remaining(t_start)
                 )
 
             with tracer.span("cache.lookup") as c_sp:
@@ -306,6 +331,13 @@ class Server:
                     proxies = proxy_fn(s1_out, ref_out, batch.n)
             t_end = self.clock()
 
+            # Failure domains absent from this batch's answer (shard died
+            # or is still recovering): flagged on every response — a
+            # degraded answer under the anytime contract, not an error.
+            partial_shards = tuple(
+                getattr(servable, "last_partial_shards", ())
+            )
+
             # Cold batches (fresh compile or aggregate build) are deploy
             # cost, not steady-state serving cost: keep them out of the
             # correction.
@@ -348,6 +380,7 @@ class Server:
                     accuracy_proxy=(
                         float(proxies[i]) if proxies is not None else None
                     ),
+                    partial_shards=partial_shards,
                 )
                 responses.append(resp)
                 self.metrics.record(resp)

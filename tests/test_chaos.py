@@ -1,0 +1,427 @@
+"""Chaos-path coverage: deterministic injectors, fault-domain serving
+(kill -> partial answer -> recovery, straggler eps-shrink, hedging),
+front-door admission control (quota, shed-before-reject), the drain
+guard, and the falsy-default linter."""
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.core.budget import BudgetPolicy, CostModel
+from repro.runtime import (
+    ChaosInjector, FailureInjector, Supervisor, sharded_knn,
+)
+from repro.runtime import chaos as chaos_lib
+from repro.serve import (
+    DeadlineController, FrontDoor, LoadShedLadder, Overloaded, Response,
+    Server, TenantSpec,
+)
+
+N, D, C = 256, 8, 5
+
+
+def _data(seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (N, D))
+    y = jax.random.randint(jax.random.fold_in(key, 1), (N,), 0, C)
+    return x, y
+
+
+def _controller(eps_max=0.32, floor=0.004):
+    policy = BudgetPolicy(
+        compression_ratio=8.0, eps_max=eps_max, degrade_floor=floor
+    )
+    ctl = DeadlineController(policy, ema=0.0)
+    ctl.set_model(
+        "knn", CostModel(c_fixed=0.0, c_stage1=0.0, c_stage2=1.0 / N)
+    )
+    return ctl
+
+
+def _fleet(chaos=None, n_shards=4, **kwargs):
+    x, y = _data()
+    return sharded_knn(
+        x, y, n_shards=n_shards, n_classes=C, k=3,
+        lsh_key=jax.random.PRNGKey(7), chaos=chaos, **kwargs
+    )
+
+
+def _query(i=0):
+    return (jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(3), i),
+                              (D,)),)
+
+
+# ---------------------------------------------------------------------------
+# injector determinism
+# ---------------------------------------------------------------------------
+
+def _collect(inj, steps=30, shards=4, order=None):
+    keys = [
+        (s, sh, kind)
+        for s in range(steps)
+        for sh in range(shards)
+        for kind in chaos_lib.EVENT_KINDS
+    ]
+    if order is not None:
+        keys = order(keys)
+    return {
+        k for k in keys if inj.fires(k[0], k[1], k[2]) is not None
+    }
+
+
+def test_injector_deterministic_under_fixed_seed():
+    kwargs = dict(p_kill=0.1, p_slow=0.2, p_drop_heartbeat=0.15,
+                  p_corrupt_snapshot=0.1)
+    a = _collect(ChaosInjector(seed=42, **kwargs))
+    b = _collect(ChaosInjector(seed=42, **kwargs))
+    assert a == b and a  # identical and non-empty
+    # every kind actually fires somewhere at these rates
+    assert {k[2] for k in a} == set(chaos_lib.EVENT_KINDS)
+    # call order doesn't matter (pure function of identity, not history)
+    c = _collect(ChaosInjector(seed=42, **kwargs),
+                 order=lambda ks: list(reversed(ks)))
+    assert c == a
+    # a different seed draws a different schedule
+    d = _collect(ChaosInjector(seed=43, **kwargs))
+    assert d != a
+
+
+def test_injector_schedule_and_attempt_semantics():
+    inj = ChaosInjector(seed=0)
+    inj.kill(2, 5)
+    inj.slow(1, 3, factor=6.0)
+    assert inj.fires(5, 2, chaos_lib.KILL) is not None
+    assert inj.fires(5, 1, chaos_lib.KILL) is None
+    assert inj.fires(4, 2, chaos_lib.KILL) is None
+    ev = inj.fires(3, 1, chaos_lib.SLOW)
+    assert ev is not None and ev.factor == 6.0
+    # a hedged re-dispatch (attempt=1) escapes the scheduled fault
+    assert inj.fires(3, 1, chaos_lib.SLOW, attempt=1) is None
+    assert inj.summary()["fired"] == 2
+
+
+# ---------------------------------------------------------------------------
+# fault-domain serving: kill -> partial -> recovery
+# ---------------------------------------------------------------------------
+
+def test_shard_kill_mid_batch_answers_every_rid_flagged_partial():
+    chaos = ChaosInjector(seed=1)
+    fleet = _fleet(chaos, recovery_batches=2)
+    server = Server([fleet], controller=_controller())
+    rids = [server.submit("knn", _query(i), 5.0) for i in range(3)]
+    healthy = server.drain()
+    assert {r.rid for r in healthy} == set(rids)
+    assert all(r.partial_shards == () for r in healthy)
+
+    # kill shard 1 on the next run (the batch's stage-1 execution)
+    chaos.kill(1, fleet.step)
+    rids2 = [server.submit("knn", _query(i), 5.0) for i in range(3)]
+    degraded = server.drain()
+    # every rid answered — a degraded answer, never a dropped one
+    assert {r.rid for r in degraded} >= set(rids2)
+    for r in degraded:
+        assert r.partial_shards == (1,)
+        assert r.degraded
+        assert r.stage1 is not None
+    assert fleet.summary()["kills"] == 1
+
+    # background recovery restores the shard after recovery_batches steps
+    for i in range(4):
+        server.submit("knn", _query(i), 5.0)
+        server.drain()
+    assert fleet.summary()["state"] == ["healthy"] * 4
+    assert fleet.summary()["recoveries"] == 1
+    server.submit("knn", _query(9), 5.0)
+    (back,) = [r for r in server.drain() if not r.reexecuted]
+    assert back.partial_shards == ()
+    # the partial responses were metered
+    fam = server.metrics.registry.counter(
+        "serve_partial_total", labels=("kind",)
+    )
+    assert fam.labels(kind="knn").value >= len(rids2)
+
+
+def test_never_kills_last_surviving_shard():
+    chaos = ChaosInjector(seed=5, p_kill=1.0)  # tries to kill everything
+    fleet = _fleet(chaos, n_shards=3)
+    prepared = fleet.build(8.0)
+    padded = fleet.pad_batch([_query(0)], 1)
+    for _ in range(5):
+        out = fleet.run(prepared, padded, refine_budget=0)
+        assert out is not None
+    assert fleet.summary()["state"].count("dead") <= 2
+    assert len(fleet.last_partial_shards) <= 2
+
+
+def test_recovery_from_corrupt_snapshot_falls_back_to_rebuild(tmp_path):
+    chaos = ChaosInjector(seed=2)
+    fleet = _fleet(chaos, recovery_batches=1, snapshot_dir=tmp_path)
+    prepared = fleet.build(8.0)
+    assert fleet.save_snapshot(tmp_path) > 0
+    padded = fleet.pad_batch([_query(0)], 1)
+    fleet.run(prepared, padded, refine_budget=0)
+
+    assert chaos_lib.corrupt_snapshot_dir(tmp_path) > 0
+    chaos.kill(0, fleet.step)
+    fleet.run(prepared, padded, refine_budget=0)       # kill lands
+    assert fleet.last_partial_shards == (0,)
+    fleet.run(prepared, padded, refine_budget=0)       # recovery attempt
+    assert fleet.summary()["recoveries"] == 1
+    assert fleet.summary()["state"][0] == "healthy"
+    out = fleet.run(prepared, padded, refine_budget=0)
+    assert fleet.last_partial_shards == () and out is not None
+
+
+def test_snapshot_restore_recovery(tmp_path):
+    chaos = ChaosInjector(seed=3)
+    fleet = _fleet(chaos, recovery_batches=1, snapshot_dir=tmp_path)
+    prepared = fleet.build(8.0)
+    fleet.save_snapshot(tmp_path)
+    padded = fleet.pad_batch([_query(0)], 1)
+    from repro.obs.metrics import default_registry
+    fam = default_registry().counter(
+        "runtime_shard_recoveries_total", labels=("outcome",)
+    )
+    before = fam.labels(outcome="restored").value
+    chaos.kill(2, fleet.step)
+    fleet.run(prepared, padded, refine_budget=0)
+    fleet.run(prepared, padded, refine_budget=0)
+    assert fam.labels(outcome="restored").value == before + 1
+
+
+# ---------------------------------------------------------------------------
+# straggler eps-shrink + hedging
+# ---------------------------------------------------------------------------
+
+def test_slow_shard_timeout_shrinks_then_restores_eps_scale():
+    chaos = ChaosInjector(seed=4, slow_factor=1000.0)
+    fleet = _fleet(chaos, hedge=False, max_slow_sleep_s=0.05)
+    prepared = fleet.build(8.0)
+    padded = fleet.pad_batch([_query(0)], 1)
+    fleet.run(prepared, padded, refine_budget=8)  # warm the jit caches
+
+    chaos.slow(2, fleet.step)
+    fleet.on_batch_deadline(0.05)  # timeout = 0.35 * 0.05 < the stall
+    fleet.run(prepared, padded, refine_budget=8)
+    assert fleet.summary()["eps_scale"][2] == 0.5
+    assert any(
+        ev.kind == chaos_lib.SLOW and ev.shard == 2 for ev in chaos.fired
+    )
+
+    # fast clean steps earn the budget back one grid notch at a time
+    fleet.on_batch_deadline(10.0)
+    fleet.run(prepared, padded, refine_budget=8)
+    assert fleet.summary()["eps_scale"][2] == 1.0
+
+
+def test_hedged_redispatch_escapes_injected_slowdown():
+    chaos = ChaosInjector(seed=6, slow_factor=1000.0)
+    fleet = _fleet(chaos, hedge=True, hedge_skew=3.0, min_hedge_s=0.01,
+                   max_slow_sleep_s=0.08)
+    prepared = fleet.build(8.0)
+    padded = fleet.pad_batch([_query(0)], 1)
+    fleet.run(prepared, padded, refine_budget=0)  # warm
+
+    chaos.slow(3, fleet.step)
+    fleet.on_batch_deadline(10.0)  # deadline leaves room for the hedge
+    fleet.run(prepared, padded, refine_budget=0)
+    s = fleet.summary()
+    assert s["hedges"] >= 1
+    assert s["hedge_wins"] >= 1  # attempt=1 escaped the stall, so it won
+    assert any(r["status"] == "hedged" for r in fleet.last_reports)
+
+
+# ---------------------------------------------------------------------------
+# front door: quotas and the load-shed ladder
+# ---------------------------------------------------------------------------
+
+def _front_door(**kwargs):
+    fleet = _fleet()
+    server = Server([fleet], controller=_controller())
+    return FrontDoor(server, default_deadline_s=5.0, **kwargs), server
+
+
+def test_quota_rejected_submits_never_enter_the_batcher():
+    fd, server = _front_door(
+        tenants=[TenantSpec("metered", rate=0.0, burst=2.0)],
+        queue_limit=16,
+    )
+    r1 = fd.submit("knn", _query(0), tenant="metered")
+    r2 = fd.submit("knn", _query(1), tenant="metered")
+    r3 = fd.submit("knn", _query(2), tenant="metered")  # bucket empty
+    assert len(server.batcher) == 0  # nothing admitted reaches it pre-pump
+    assert fd.backlog() == 2
+    refusal = fd.result(r3)
+    assert isinstance(refusal, Overloaded)
+    assert refusal.reason == "quota" and refusal.tenant == "metered"
+    assert refusal.answer is None
+    fd.pump(max_batches=10)
+    assert isinstance(fd.result(r1), Response)
+    assert isinstance(fd.result(r2), Response)
+    # the refused rid was answered immediately and never served
+    assert isinstance(fd.result(r3), Overloaded)
+    assert fd.stats()["admitted"] == 2
+    assert fd.stats()["rejected"]["quota"] == 1
+
+
+def test_load_shed_ladder_steps_down_before_first_rejection():
+    fd, server = _front_door(queue_limit=4)
+    base_eps = server.controller.policy.eps_max
+    rids = [fd.submit("knn", _query(i)) for i in range(24)]
+    stats = fd.stats()
+    assert stats["rejected"]["overload"] > 0
+    assert stats["shed_before_reject"]
+    assert stats["first_shed_t"] < stats["first_reject_t"]
+    # the ladder walked every rung down before the first refusal
+    downs = [t for t in stats["shed_transitions"] if t["to"] > t["from"]]
+    assert [t["to"] for t in downs[:3]] == [1, 2, 3]
+    assert all(t["t"] <= stats["first_reject_t"] for t in downs[:3])
+    # fleet-wide degradation is live while shedding
+    assert server.controller.policy.eps_max == pytest.approx(
+        base_eps * fd.ladder.factor
+    )
+    # every rid resolves: degraded/refused answers are answers
+    while fd.backlog():
+        fd.pump(max_batches=4)
+    results = [fd.result(rid) for rid in rids]
+    assert all(r is not None for r in results)
+    kinds = {type(r) for r in results}
+    assert kinds == {Response, Overloaded}
+    refused = [r for r in results if isinstance(r, Overloaded)]
+    assert all(r.reason == "overload" and r.retry_after_s > 0
+               for r in refused)
+    assert all(r.shed_level == fd.ladder.max_level for r in refused)
+    # once drained, the ladder recovers and eps is restored rung by rung
+    for _ in range(10):
+        fd.pump()
+    assert fd.ladder.level == 0
+    assert server.controller.policy.eps_max == pytest.approx(base_eps)
+
+
+def test_ladder_hysteresis_band():
+    ladder = LoadShedLadder(fire=0.7, clear=0.25)
+    assert ladder.evaluate(0.9, now=0.0) and ladder.level == 1
+    # inside the band: no flapping either way
+    assert not ladder.evaluate(0.5, now=1.0)
+    assert ladder.level == 1
+    assert ladder.evaluate(0.1, now=2.0) and ladder.level == 0
+    with pytest.raises(ValueError):
+        LoadShedLadder(fire=0.3, clear=0.5)
+
+
+def test_front_door_thread_mode_answers_all():
+    fd, _ = _front_door(queue_limit=32, poll_s=0.001)
+    fd.start()
+    try:
+        rids = [fd.submit("knn", _query(i)) for i in range(6)]
+        results = [fd.wait(rid, timeout_s=60.0) for rid in rids]
+    finally:
+        fd.stop()
+    assert all(isinstance(r, Response) for r in results)
+    with pytest.raises(KeyError):
+        fd.wait(10**9)
+
+
+# ---------------------------------------------------------------------------
+# drain guard + re-execution can't re-escalate
+# ---------------------------------------------------------------------------
+
+def test_drain_bounded_and_reexecution_never_reescalates():
+    fleet = _fleet()
+    # floor above eps_max: every first execution escalates
+    server = Server(
+        [fleet], controller=_controller(eps_max=0.32, floor=0.5)
+    )
+    server.submit("knn", _query(0), 1e-9)
+    responses = server.drain()
+    # exactly one first answer + one re-execution: even with the grant
+    # still flagged escalated (the floor is unsatisfiable by design here),
+    # a re-execution batch is never requeued — drain terminates.
+    assert [r.reexecuted for r in responses] == [False, True]
+    assert responses[0].escalated
+    assert len(server.batcher) == 0
+
+    # the guard itself: more batches queued than max_steps allows
+    server.submit("knn", _query(1), 5.0)
+    server.submit("knn", _query(2), 1e-9)  # different SLO class -> 2 batches
+    with pytest.raises(RuntimeError, match="max_steps"):
+        server.drain(max_steps=1)
+    server.drain()  # leaves the server clean
+
+
+# ---------------------------------------------------------------------------
+# supervisor shard identity
+# ---------------------------------------------------------------------------
+
+def test_supervisor_shard_identity_parameterized(tmp_path):
+    from repro.obs.metrics import default_registry
+
+    sup = Supervisor(
+        Checkpointer(str(tmp_path)), save_every=100,
+        injector=FailureInjector({2: "straggler"}),
+    )
+    _, report = sup.run(jnp.zeros(()), lambda s, i: s + 1, num_steps=4,
+                        shard=3)
+    assert list(sup.heartbeats) == [3]
+    assert sup.heartbeats[3].shard == 3
+    assert len(report["stragglers"]) == 1
+    gauge = default_registry().gauge(
+        "runtime_straggler_eps", labels=("shard",)
+    )
+    assert gauge.labels(shard=3).value > 0.0
+    assert sup.dead_shards(timeout_s=0.0) == [3]
+    assert not sup.heartbeats[3].alive
+    assert sup.dead_shards(timeout_s=1e9) == []
+
+
+# ---------------------------------------------------------------------------
+# falsy-default linter
+# ---------------------------------------------------------------------------
+
+LINTER = Path(__file__).resolve().parents[1] / "tools" / "lint_falsy_defaults.py"
+
+
+def _lint(code: str):
+    with tempfile.NamedTemporaryFile("w", suffix=".py", delete=False) as f:
+        f.write(code)
+        path = f.name
+    return subprocess.run(
+        [sys.executable, str(LINTER), path], capture_output=True, text=True
+    )
+
+
+def test_linter_flags_param_or_ctor():
+    r = _lint(
+        "def f(store=None):\n"
+        "    store = store or dict()\n"
+        "    return store\n"
+    )
+    assert r.returncode == 1
+    assert "discards falsy-but-valid `store`" in r.stdout
+
+
+def test_linter_accepts_explicit_none_check_and_suppression():
+    r = _lint(
+        "def f(store=None, batcher=None):\n"
+        "    store = store if store is not None else dict()\n"
+        "    batcher = batcher or list()  # lint: allow-falsy-default\n"
+        "    local = None\n"
+        "    local = local or dict()\n"   # not a parameter: fine
+        "    return store, batcher, local\n"
+    )
+    assert r.returncode == 0, r.stdout
+
+
+def test_linter_clean_on_repo():
+    repo = Path(__file__).resolve().parents[1]
+    r = subprocess.run(
+        [sys.executable, str(LINTER)], capture_output=True, text=True,
+        cwd=repo,
+    )
+    assert r.returncode == 0, r.stdout

@@ -1,0 +1,124 @@
+#!/usr/bin/env python
+"""Lint: flag ``param or Ctor()`` defaulting of function parameters.
+
+The bug class this kills shipped twice in this repo before CI caught on:
+
+    self.store = store or AggregateStore()        # PR 2
+    self.batcher = batcher or ContinuousBatcher() # fixed in PR 7
+
+``or`` treats every falsy value as "not provided" — but an empty
+``AggregateStore`` / ``ContinuousBatcher`` (len 0), ``0``, ``0.0``, ``""``
+are all valid caller-supplied arguments, silently discarded.  The correct
+spelling is explicit::
+
+    self.store = store if store is not None else AggregateStore()
+
+Detection: inside each function, any ``X or <Call>(...)`` BoolOp whose
+left operand is a bare Name bound as a *parameter* of an enclosing
+function is flagged.  Calls on the right are what make the pattern a
+default (``x or 3`` on a param is flagged too when the param annotation
+suggests Optional — kept simple: only Call defaults are flagged, the
+shipped bug shape).
+
+Suppress a deliberate use with ``# lint: allow-falsy-default`` on the line.
+
+Usage: ``python tools/lint_falsy_defaults.py [paths...]`` (default:
+``src`` ``tools`` ``benchmarks`` ``examples``).  Exit 1 when findings.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+SUPPRESS = "lint: allow-falsy-default"
+DEFAULT_PATHS = ("src", "tools", "benchmarks", "examples")
+
+
+class _Finder(ast.NodeVisitor):
+    def __init__(self, source_lines: list[str]):
+        self.source_lines = source_lines
+        self.param_stack: list[set[str]] = []
+        self.findings: list[tuple[int, str]] = []
+
+    def _visit_func(self, node: ast.FunctionDef | ast.AsyncFunctionDef) -> None:
+        a = node.args
+        params = {
+            arg.arg
+            for arg in (
+                list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+            )
+        }
+        if a.vararg:
+            params.add(a.vararg.arg)
+        if a.kwarg:
+            params.add(a.kwarg.arg)
+        params.discard("self")
+        params.discard("cls")
+        self.param_stack.append(params)
+        self.generic_visit(node)
+        self.param_stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def _is_param(self, name: str) -> bool:
+        return any(name in params for params in self.param_stack)
+
+    def visit_BoolOp(self, node: ast.BoolOp) -> None:
+        if isinstance(node.op, ast.Or) and len(node.values) >= 2:
+            left = node.values[0]
+            right = node.values[-1]
+            if (
+                isinstance(left, ast.Name)
+                and self._is_param(left.id)
+                and isinstance(right, ast.Call)
+            ):
+                line = ""
+                if 0 < node.lineno <= len(self.source_lines):
+                    line = self.source_lines[node.lineno - 1]
+                if SUPPRESS not in line:
+                    self.findings.append(
+                        (
+                            node.lineno,
+                            f"`{left.id} or {ast.unparse(right)}` discards "
+                            f"falsy-but-valid `{left.id}`; use "
+                            f"`{left.id} if {left.id} is not None else ...`",
+                        )
+                    )
+        self.generic_visit(node)
+
+
+def lint_file(path: Path) -> list[tuple[int, str]]:
+    source = path.read_text()
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as e:
+        return [(e.lineno or 0, f"syntax error: {e.msg}")]
+    finder = _Finder(source.splitlines())
+    finder.visit(tree)
+    return finder.findings
+
+
+def main(argv: list[str]) -> int:
+    roots = [Path(p) for p in (argv or DEFAULT_PATHS)]
+    failed = 0
+    for root in roots:
+        if root.is_file():
+            files = [root]
+        elif root.is_dir():
+            files = sorted(root.rglob("*.py"))
+        else:
+            continue
+        for f in files:
+            for lineno, msg in lint_file(f):
+                print(f"{f}:{lineno}: {msg}")
+                failed += 1
+    if failed:
+        print(f"lint_falsy_defaults: {failed} finding(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
