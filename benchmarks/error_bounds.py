@@ -1,0 +1,223 @@
+"""Error-bound calibration benchmark: are the claimed CIs honest and useful?
+
+Two phases, one BENCH json line:
+
+1. **Calibration curve** (offline, against *exact* results): for each
+   workload and several eps levels, compare every query's claimed
+   ``ErrorBound`` against its observed error — kNN top-k label divergence
+   vs ``exact_map``, CF mean absolute rating error vs ``run_exact``.
+   ``coverage`` is the fraction of queries whose observed error the claim
+   dominated; it must stay >= the bounds' stated confidence (0.9) at every
+   eps level, else ``BENCH_FAIL`` (the claim would be a lie).
+
+2. **Accuracy-SLO serving phase** (the latency win): the demo server runs
+   one traffic wave without ``max_error`` (normal anytime refinement) and
+   one with a generous ``max_error`` — the second must skip stage 2
+   (``refine_skipped``) off the claimed bound and land a measurably lower
+   total latency, else ``BENCH_FAIL`` (the contract bought nothing).
+
+    PYTHONPATH=src python -m benchmarks.error_bounds
+    REPRO_BENCH_TINY=1 ...   # CI smoke sizes
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.apps import cf as cf_lib
+from repro.apps import knn as knn_lib
+from repro.core import lsh as lsh_lib
+from repro.core.refine import eps_to_budget
+from repro.data.synthetic import make_mfeat_like, make_netflix_like
+from repro.serve.demo import build_demo_server, prepare_demo_server
+
+TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
+BATCH = 4
+K = 5
+RATIO = 20.0
+EPS_LEVELS = (0.0, 0.02, 0.08)
+KNN_N, KNN_D, KNN_C, KNN_Q = (2_048, 32, 10, 32) if TINY else (16_384, 48, 10, 128)
+CF_U, CF_I, CF_Q = (512, 128, 16) if TINY else (3_072, 384, 48)
+MIN_COVERAGE = 0.9
+
+
+def _knn_divergence(d1, l1, d2, l2, k: int) -> list[float]:
+    """Top-k label-multiset divergence per query (the accuracy-proxy metric)."""
+    d1, l1 = np.asarray(d1), np.asarray(l1)
+    d2, l2 = np.asarray(d2), np.asarray(l2)
+    out = []
+    for i in range(d1.shape[0]):
+        c1 = collections.Counter(l1[i][d1[i] < knn_lib.BIG / 2].tolist())
+        c2 = collections.Counter(l2[i][d2[i] < knn_lib.BIG / 2].tolist())
+        out.append(1.0 - sum((c1 & c2).values()) / k)
+    return out
+
+
+def knn_calibration() -> list[dict]:
+    """Claimed-vs-observed points for the kNN bound at each eps level."""
+    x, y = make_mfeat_like(
+        jax.random.PRNGKey(0), n_points=KNN_N + KNN_Q, n_features=KNN_D,
+        n_classes=KNN_C, modes_per_class=24, mode_scale=0.5,
+    )
+    tx, ty, qx = x[KNN_Q:], y[KNN_Q:], x[:KNN_Q]
+    cfg = lsh_lib.config_for_compression(KNN_N, RATIO)
+    params = lsh_lib.init_lsh(jax.random.PRNGKey(7), KNN_D, cfg)
+    agg = knn_lib.build_knn_aggregates(tx, ty, params, KNN_C)
+    ed, el = knn_lib.exact_map(tx, ty, qx, k=K)
+    curve = []
+    for eps in EPS_LEVELS:
+        budget = eps_to_budget(KNN_N, eps)
+        d, l, b = knn_lib.accurateml_map(
+            tx, ty, agg, qx, k=K, refine_budget=budget, with_bound=True
+        )
+        claimed = np.asarray(b, dtype=np.float64)
+        observed = np.asarray(_knn_divergence(d, l, ed, el, K))
+        curve.append({
+            "eps": eps,
+            "coverage": float(np.mean(claimed + 1e-9 >= observed)),
+            "mean_claimed": float(claimed.mean()),
+            "mean_observed": float(observed.mean()),
+        })
+    return curve
+
+
+def cf_calibration() -> list[dict]:
+    """Claimed-vs-observed points for the CF stderr bound at each eps level."""
+    ratings, mask = make_netflix_like(
+        jax.random.PRNGKey(1), n_users=CF_U, n_items=CF_I, density=0.12,
+    )
+    r = ratings * mask
+    active, active_mask = r[:CF_Q], mask[:CF_Q]
+    cfg = lsh_lib.config_for_compression(CF_U, RATIO)
+    params = lsh_lib.init_lsh(jax.random.PRNGKey(8), CF_I, cfg)
+    agg = cf_lib.build_cf_aggregates(r, mask, params)
+    exact = cf_lib.run_exact(r, mask, active, active_mask)
+    curve = []
+    for eps in EPS_LEVELS:
+        budget = eps_to_budget(CF_U, eps)
+        num, den, varsum = cf_lib.accurateml_map(
+            r, mask, agg, active, active_mask,
+            refine_budget=budget, with_bound=True,
+        )
+        pred = cf_lib.predict(num, den, active, active_mask)
+        stderr = jnp.where(
+            den > 1e-8, jnp.sqrt(varsum) / jnp.maximum(den, 1e-8), 0.0
+        )
+        claimed = np.asarray(
+            cf_lib.CF_BOUND_Z * jnp.mean(stderr, axis=-1), dtype=np.float64
+        )
+        observed = np.asarray(jnp.mean(jnp.abs(pred - exact), axis=-1))
+        curve.append({
+            "eps": eps,
+            "coverage": float(np.mean(claimed + 1e-9 >= observed)),
+            "mean_claimed": float(claimed.mean()),
+            "mean_observed": float(observed.mean()),
+        })
+    return curve
+
+
+def serving_early_stop() -> dict:
+    """Accuracy-SLO traffic: generous max_error must skip stage 2 early."""
+    sizes = {"knn_points": 2_048, "cf_users": 512} if TINY else {}
+    server, queries, active, active_mask = build_demo_server(
+        batch=BATCH, **sizes
+    )
+    prepare_demo_server(server, batch=BATCH)
+    relaxed = {
+        kind: 1.5 * server.controller.deadline_for(
+            kind, s.n_points, server.controller.policy.eps_max
+        )
+        for kind, s in server.servables.items()
+    }
+
+    def wave(kind, offset, max_error):
+        for i in range(BATCH):
+            if kind == "knn":
+                payload = (queries[(offset + i) % queries.shape[0]],)
+            else:
+                j = (offset + i) % active.shape[0]
+                payload = (active[j], active_mask[j])
+            server.submit(
+                kind, payload, deadline_s=relaxed[kind], max_error=max_error
+            )
+        return server.drain()
+
+    waves = 1 if TINY else 4
+    refine_ms, skip_ms, skipped, bounds_seen = [], [], 0, 0
+    for w in range(waves):
+        for kind in ("knn", "cf"):
+            # Normal anytime refinement (no accuracy SLO) ...
+            for r in wave(kind, offset=w * BATCH, max_error=None):
+                refine_ms.append(r.total_latency_s * 1e3)
+                bounds_seen += r.error_bound is not None
+            # ... vs the same traffic under a generous accuracy SLO: the
+            # stage-1 bound satisfies it, so stage 2 is skipped outright.
+            generous = 1.0 if kind == "knn" else 10.0
+            for r in wave(kind, offset=w * BATCH, max_error=generous):
+                skip_ms.append(r.total_latency_s * 1e3)
+                skipped += r.refine_skipped
+                bounds_seen += r.error_bound is not None
+    summary = server.summary()
+    return {
+        "refine_p50_ms": float(np.median(refine_ms)),
+        "skip_p50_ms": float(np.median(skip_ms)),
+        "latency_win": float(np.median(refine_ms) / max(np.median(skip_ms), 1e-9)),
+        "refine_skipped_responses": int(skipped),
+        "responses_with_bound": int(bounds_seen),
+        "responses_total": len(refine_ms) + len(skip_ms),
+        "accuracy_slo": summary.get("accuracy_slo", {}),
+        "error_bound": summary.get("error_bound", {}),
+    }
+
+
+def run():
+    knn_curve = knn_calibration()
+    cf_curve = cf_calibration()
+    serving = serving_early_stop()
+    knn_cov = min(p["coverage"] for p in knn_curve)
+    cf_cov = min(p["coverage"] for p in cf_curve)
+    summary = {
+        "knn_curve": knn_curve,
+        "cf_curve": cf_curve,
+        "knn_coverage": knn_cov,
+        "cf_coverage": cf_cov,
+        "serving": serving,
+    }
+    print("BENCH " + json.dumps({"error_bounds": summary}))
+    emit(
+        "error_bounds_knn_coverage", knn_cov * 1e3,
+        f"cf_coverage={cf_cov:.2f};"
+        f"latency_win={serving['latency_win']:.2f};"
+        f"skipped={serving['refine_skipped_responses']}",
+    )
+    ok = True
+    if knn_cov < MIN_COVERAGE or cf_cov < MIN_COVERAGE:
+        print(
+            f"BENCH_FAIL,error_bounds:claimed coverage below "
+            f"{MIN_COVERAGE} (knn={knn_cov:.2f}, cf={cf_cov:.2f})"
+        )
+        ok = False
+    if serving["refine_skipped_responses"] == 0:
+        print("BENCH_FAIL,error_bounds:no request stopped refining early")
+        ok = False
+    if serving["responses_with_bound"] != serving["responses_total"]:
+        print("BENCH_FAIL,error_bounds:responses missing ErrorBound")
+        ok = False
+    if serving["latency_win"] <= 1.0:
+        print("BENCH_FAIL,error_bounds:early stop bought no latency")
+        ok = False
+    summary["ok"] = ok
+    return summary
+
+
+if __name__ == "__main__":
+    import sys
+
+    s = run()
+    sys.exit(0 if s["ok"] else 1)

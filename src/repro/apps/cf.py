@@ -33,7 +33,9 @@ from repro.core import engine as engine_lib
 from repro.core import lsh as lsh_lib
 from repro.core import refine as refine_lib
 from repro.kernels import ops as kernel_ops
+from repro.kernels.topk_stream import BIG  # shared sentinel: one definition
 from repro.serve import servable as serve_servable
+from repro.serve.request import ErrorBound
 
 
 def user_means(ratings: jax.Array, mask: jax.Array) -> jax.Array:
@@ -51,6 +53,16 @@ SHRINK = 8.0
 
 def shrink_weights(w: jax.Array, co_counts: jax.Array) -> jax.Array:
     return w * (co_counts / (co_counts + SHRINK))
+
+
+# Error-bound calibration knobs: the claimed CF bound is
+#     CF_BOUND_Z * mean_i( sqrt(Σ_g w_g² · SS_g[i]) / den[i] )
+# (SS_g = within-bucket centred second moment of ratings; the surrogate's
+# stderr under a within-bucket-iid model).  Z is tuned so the claim covers
+# >= CF_BOUND_CONFIDENCE of observed |approx - exact| rating MAEs in
+# ``benchmarks/error_bounds.py``.
+CF_BOUND_Z = 3.0
+CF_BOUND_CONFIDENCE = 0.9
 
 
 # ---------------------------------------------------------------------------
@@ -92,9 +104,13 @@ class CFAggregates:
     profile_mask: jax.Array       # [K,I] 1 where any bucket user rated i
     s: jax.Array                  # [K,I] centred sums
     c: jax.Array                  # [K,I] rater counts
+    cvar: jax.Array               # [K,I] centred 2nd moment of ratings (SS)
 
     def tree_flatten(self):
-        return (self.agg, self.profile, self.profile_mask, self.s, self.c), None
+        return (
+            self.agg, self.profile, self.profile_mask, self.s, self.c,
+            self.cvar,
+        ), None
 
     @classmethod
     def tree_unflatten(cls, _, leaves):
@@ -106,6 +122,9 @@ def _build_cf_aggregates(ratings, mask, ids, n_buckets):
     means = user_means(ratings, mask)
     centred = (ratings - means) * mask
     sr = jax.ops.segment_sum(ratings * mask, ids, num_segments=n_buckets)
+    sr2 = jax.ops.segment_sum(
+        jnp.square(ratings) * mask, ids, num_segments=n_buckets
+    )
     s = jax.ops.segment_sum(centred, ids, num_segments=n_buckets)
     c = jax.ops.segment_sum(mask, ids, num_segments=n_buckets)
     counts = jax.ops.segment_sum(
@@ -123,7 +142,8 @@ def _build_cf_aggregates(ratings, mask, ids, n_buckets):
         bucket_of=ids.astype(jnp.int32),
     )
     return CFAggregates(
-        agg=agg, profile=profile, profile_mask=profile_mask, s=s, c=c
+        agg=agg, profile=profile, profile_mask=profile_mask, s=s, c=c,
+        cvar=agg_lib.centered_second_moment(sr, sr2, c),
     )
 
 
@@ -142,9 +162,11 @@ def cf_mergeable_stats(
 ) -> dict[str, jax.Array]:
     """Additive per-bucket statistics for the aggregate store.
 
-    ``sr`` (raw rating sums), ``s`` (centred sums), ``c`` (rater counts) and
-    the user counts are all additive under bucket union, so a coarser
-    pyramid level's centroid profile (sr/c) and surrogate terms re-derive
+    ``sr`` (raw rating sums), ``sr2`` (raw squared-rating sums — the second
+    moment behind the per-bucket rating variance that prices the error
+    bound), ``s`` (centred sums), ``c`` (rater counts) and the user counts
+    are all additive under bucket union, so a coarser pyramid level's
+    centroid profile (sr/c), surrogate terms, and variance re-derive
     exactly from merged statistics.
     """
     centred = (ratings - user_means(ratings, mask)) * mask
@@ -154,6 +176,9 @@ def cf_mergeable_stats(
         "sr": jax.ops.segment_sum(
             ratings * mask, fine_ids, num_segments=n_buckets
         ),
+        "sr2": jax.ops.segment_sum(
+            jnp.square(ratings) * mask, fine_ids, num_segments=n_buckets
+        ),
         "s": jax.ops.segment_sum(centred, fine_ids, num_segments=n_buckets),
         "c": jax.ops.segment_sum(mask, fine_ids, num_segments=n_buckets),
     }
@@ -161,27 +186,45 @@ def cf_mergeable_stats(
 
 @jax.jit
 def cf_assemble(stats: dict, index: agg_lib.BucketIndex) -> CFAggregates:
-    """Statistics + index -> the prepared aggregates ``accurateml_map`` uses."""
+    """Statistics + index -> the prepared aggregates ``accurateml_map`` uses.
+
+    Snapshots that predate the second-moment statistics (no ``sr2`` entry)
+    assemble with a saturated variance (finite BIG, not inf: cvar feeds a
+    matmul where 0-weight x inf would poison the sum with NaN) so any
+    answer touching them claims an unusably large bound — max uncertainty,
+    never silent optimism.
+    """
     c = stats["c"]
     profile = stats["sr"] / jnp.maximum(c, 1.0)
     agg = agg_lib.AggregatedData(
         means=profile, counts=stats["counts"], perm=index.perm,
         offsets=index.offsets, bucket_of=index.bucket_of,
     )
+    if "sr2" in stats:
+        cvar = agg_lib.centered_second_moment(stats["sr"], stats["sr2"], c)
+    else:
+        cvar = jnp.full(c.shape, BIG, profile.dtype)
     return CFAggregates(
         agg=agg, profile=profile, profile_mask=(c > 0).astype(profile.dtype),
-        s=stats["s"], c=c,
+        s=stats["s"], c=c, cvar=cvar,
     )
 
 
-@partial(jax.jit, static_argnames=("refine_budget",))
+@partial(jax.jit, static_argnames=("refine_budget", "with_bound"))
 def accurateml_map(
     ratings, mask, cf_agg: CFAggregates, active, active_mask,
-    *, refine_budget: int,
+    *, refine_budget: int, with_bound: bool = False,
 ):
     """Algorithm 1 for CF.  Correlation of bucket g for active user q is
     |w(q, centroid_g)| (paper: the weight to the aggregated user); each
-    active user ranks and refines its own buckets (per-query Alg. 1)."""
+    active user ranks and refines its own buckets (per-query Alg. 1).
+
+    With ``with_bound=True`` a third output ``varsum`` [Q,I] is returned:
+    Σ_g w_g² · SS_g[i] over the buckets still answered by surrogate (after
+    refinement, covered buckets contribute exact terms — zero surrogate
+    variance).  It is additive under the engine's psum, so the cross-shard
+    stderr sqrt(varsum)/den is exact, not a per-shard approximation.
+    """
     agg = cf_agg.agg
     # ---- stage 1: centroid weights + surrogate contribution ----
     w_g = kernel_ops.cf_weights(
@@ -194,7 +237,10 @@ def accurateml_map(
     den = jnp.abs(w_g) @ cf_agg.c
 
     if refine_budget <= 0:
-        return num, den
+        if not with_bound:
+            return num, den
+        varsum = jnp.square(w_g) @ cf_agg.cvar           # [Q,I]
+        return num, den, varsum
 
     # ---- stage 2: per-query replacement of top buckets by exact users ----
     corr = jnp.abs(w_g)                                  # [Q,K]
@@ -224,7 +270,13 @@ def accurateml_map(
     w_g_cov = jnp.where(covered, w_g, 0.0)
     num = num - w_g_cov @ cf_agg.s + num_delta
     den = den - jnp.abs(w_g_cov) @ cf_agg.c + den_delta
-    return num, den
+    if not with_bound:
+        return num, den
+    # Surrogate variance only over the *unrefined* buckets: covered ones
+    # were replaced by exact per-user terms and carry no surrogate error.
+    w_g_unc = jnp.where(covered, 0.0, w_g)
+    varsum = jnp.square(w_g_unc) @ cf_agg.cvar
+    return num, den, varsum
 
 
 # ---------------------------------------------------------------------------
@@ -364,18 +416,39 @@ class CFServable(serve_servable.LSHServableBase):
         *, refine_budget: int,
     ) -> jax.Array:
         active, active_mask = batch_payload
-        map_fn = partial(accurateml_map, refine_budget=refine_budget)
-        combine = engine_lib.CombineSpec(
-            mode="psum",
-            reduce_fn=lambda nd: predict(nd[0], nd[1], active, active_mask),
+        map_fn = partial(
+            accurateml_map, refine_budget=refine_budget, with_bound=True
         )
+
+        def reduce_fn(nd):
+            # nd = psum'd (num, den, varsum): both the prediction and the
+            # surrogate stderr are exact cross-shard (all three additive).
+            pred = predict(nd[0], nd[1], active, active_mask)
+            stderr = jnp.where(
+                nd[1] > 1e-8, jnp.sqrt(nd[2]) / jnp.maximum(nd[1], 1e-8), 0.0
+            )
+            return pred, CF_BOUND_Z * jnp.mean(stderr, axis=-1)
+
+        combine = engine_lib.CombineSpec(mode="psum", reduce_fn=reduce_fn)
         return self.engine.run(
             map_fn, combine, self.ratings, self.mask,
             replicated_args=(prepared, active, active_mask),
         )
 
-    def unpack(self, outputs: jax.Array, n: int) -> list:
-        return list(np.asarray(outputs[:n]))
+    def unpack(self, outputs: tuple, n: int) -> list:
+        return list(np.asarray(outputs[0][:n]))
+
+    def error_bounds(self, stage1_out, n: int) -> list:
+        """Per-user claimed bound on the mean absolute rating error."""
+        bounds = np.asarray(stage1_out[1][:n])
+        return [
+            ErrorBound(
+                value=float(b),
+                metric="rating_mae",
+                confidence=CF_BOUND_CONFIDENCE,
+            )
+            for b in bounds
+        ]
 
     def accuracy_proxy(self, stage1_out, refined_out, n: int) -> list[float]:
         """Mean absolute rating delta per active user, stage-1 vs refined.
@@ -385,8 +458,8 @@ class CFServable(serve_servable.LSHServableBase):
         (in rating units) — the serving-path analogue of the paper's
         prediction-error metric.
         """
-        s1 = np.asarray(stage1_out[:n], dtype=np.float64)
-        s2 = np.asarray(refined_out[:n], dtype=np.float64)
+        s1 = np.asarray(stage1_out[0][:n], dtype=np.float64)
+        s2 = np.asarray(refined_out[0][:n], dtype=np.float64)
         return [float(v) for v in np.mean(np.abs(s2 - s1), axis=-1)]
 
 

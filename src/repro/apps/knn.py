@@ -28,6 +28,15 @@ from repro.core import refine as refine_lib
 from repro.kernels import ops as kernel_ops
 from repro.kernels.topk_stream import BIG  # shared sentinel: one definition
 from repro.serve import servable as serve_servable
+from repro.serve.request import ErrorBound
+
+# Chebyshev-style slack on the spread/gap displacement probability (both in
+# squared-distance units): scales how aggressively within-bucket spread is
+# assumed to displace a selected neighbour past the top-k boundary.
+# Calibrated against exact answers by benchmarks/error_bounds.py (claimed
+# coverage must stay >= 0.9).
+KNN_BOUND_SLACK = 1.0
+KNN_BOUND_CONFIDENCE = 0.9
 
 
 # ---------------------------------------------------------------------------
@@ -109,13 +118,22 @@ def sampled_map(train_x, train_y, test_x, sample_idx, *, k: int, n_sample: int):
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class KNNAggregates:
-    """Aggregated training shard: centroids + bucket-majority labels."""
+    """Aggregated training shard: centroids + bucket-majority labels.
+
+    ``spread`` and ``dispersion`` are derived from the second-moment
+    sufficient statistics (feature sumsq, label histogram) and feed the
+    per-query stage-1 error bound; both are +inf on empty buckets.
+    """
 
     agg: agg_lib.AggregatedData
     bucket_labels: jax.Array  # [K] majority label per bucket
+    spread: jax.Array         # [K] within-bucket E‖x − μ‖² (+inf if empty)
+    dispersion: jax.Array     # [K] 1 − majority-label fraction (+inf if empty)
 
     def tree_flatten(self):
-        return (self.agg, self.bucket_labels), None
+        return (
+            self.agg, self.bucket_labels, self.spread, self.dispersion
+        ), None
 
     @classmethod
     def tree_unflatten(cls, _, leaves):
@@ -127,14 +145,24 @@ def build_knn_aggregates(
     n_classes: int,
 ) -> KNNAggregates:
     ids = lsh_lib.bucket_ids(train_x, params)
-    agg = agg_lib.aggregate_by_bucket(train_x, ids, params.config.n_buckets)
+    n_buckets = params.config.n_buckets
+    agg = agg_lib.aggregate_by_bucket(train_x, ids, n_buckets)
     label_hist = jax.ops.segment_sum(
         jax.nn.one_hot(train_y, n_classes),
         ids,
-        num_segments=params.config.n_buckets,
+        num_segments=n_buckets,
     )
     bucket_labels = jnp.argmax(label_hist, axis=-1).astype(jnp.int32)
-    return KNNAggregates(agg=agg, bucket_labels=bucket_labels)
+    sums = jax.ops.segment_sum(
+        train_x.astype(jnp.float32), ids, num_segments=n_buckets
+    )
+    sumsq = agg_lib.bucket_sumsq(train_x, ids, n_buckets)
+    return KNNAggregates(
+        agg=agg,
+        bucket_labels=bucket_labels,
+        spread=agg_lib.bucket_spread(sums, sumsq, agg.counts),
+        dispersion=agg_lib.histogram_dispersion(label_hist),
+    )
 
 
 @partial(jax.jit, static_argnames=("n_buckets", "n_classes"))
@@ -144,9 +172,10 @@ def knn_mergeable_stats(
 ) -> dict[str, jax.Array]:
     """Additive per-bucket sufficient statistics for the aggregate store.
 
-    Feature sums, point counts, and the label histogram are all additive
-    under bucket union, so every coarser pyramid level merges exactly
-    (weighted means and majority labels re-derive from the merged stats).
+    Feature sums, per-feature sums of squares, point counts, and the label
+    histogram are all additive under bucket union, so every coarser pyramid
+    level merges exactly (weighted means, majority labels, and the
+    error-bound spread/dispersion re-derive from the merged stats).
     """
     ones = jnp.ones((train_x.shape[0],), dtype=jnp.int32)
     return {
@@ -154,6 +183,7 @@ def knn_mergeable_stats(
         "sums": jax.ops.segment_sum(
             train_x.astype(jnp.float32), fine_ids, num_segments=n_buckets
         ),
+        "sumsq": agg_lib.bucket_sumsq(train_x, fine_ids, n_buckets),
         "label_hist": jax.ops.segment_sum(
             jax.nn.one_hot(train_y, n_classes), fine_ids,
             num_segments=n_buckets,
@@ -163,7 +193,12 @@ def knn_mergeable_stats(
 
 @jax.jit
 def knn_assemble(stats: dict, index: agg_lib.BucketIndex) -> KNNAggregates:
-    """Statistics + index -> the prepared aggregates ``accurateml_map`` uses."""
+    """Statistics + index -> the prepared aggregates ``accurateml_map`` uses.
+
+    Snapshots written before the second-moment statistics existed restore
+    without a ``sumsq`` entry; the spread then degrades to +inf everywhere
+    (maximum uncertainty — the conservative direction), never to 0.
+    """
     counts = stats["counts"]
     means = stats["sums"] / jnp.maximum(
         counts[:, None].astype(jnp.float32), 1.0
@@ -173,10 +208,97 @@ def knn_assemble(stats: dict, index: agg_lib.BucketIndex) -> KNNAggregates:
         bucket_of=index.bucket_of,
     )
     labels = jnp.argmax(stats["label_hist"], axis=-1).astype(jnp.int32)
-    return KNNAggregates(agg=agg, bucket_labels=labels)
+    if "sumsq" in stats:
+        spread = agg_lib.bucket_spread(stats["sums"], stats["sumsq"], counts)
+    else:
+        spread = jnp.full(counts.shape, jnp.inf, jnp.float32)
+    return KNNAggregates(
+        agg=agg,
+        bucket_labels=labels,
+        spread=spread,
+        dispersion=agg_lib.histogram_dispersion(stats["label_hist"]),
+    )
 
 
-@partial(jax.jit, static_argnames=("k", "refine_budget"))
+def _vote_bound(
+    d: jax.Array, lab: jax.Array, spread_sel: jax.Array,
+    disp_sel: jax.Array, k: int, hidden: jax.Array | None = None,
+) -> jax.Array:
+    """[Q,k+1] selected distances/labels + per-candidate spread/dispersion
+    -> [Q] claimed upper bound on the answer's label divergence from exact.
+
+    Per kept neighbour i the bound prices two failure modes:
+
+      * *displacement that matters*: the within-bucket spread of its own
+        bucket plus the first excluded candidate's (either side moving
+        closes the gap), against the squared-distance gap to that excluded
+        candidate, scaled by the label-disagreement rate among the selected
+        candidates — a neighbour displaced by a same-label competitor
+        leaves the vote's label multiset unchanged, which is what makes
+        the bound *tight* on well-separated data instead of saturating;
+      * *relabeling*: the bucket's label-histogram dispersion (the
+        centroid's majority label can be wrong even at exact distance).
+
+    ``hidden`` ([Q], refined path only) adds the residual risk that an
+    *unselected* unrefined bucket hides a true neighbour — after stage 2
+    the kept candidates can all be exact originals (zero spread) while
+    a never-refined bucket whose centroid sits within spread-reach of
+    the kept radius still conceals error; without this term the claim
+    collapses to ~0 while the true divergence does not.
+
+    Candidates with spread/dispersion +inf (empty buckets, pre-second-moment
+    snapshots) and BIG-padded slots saturate to probability 1 — unknown
+    uncertainty can never claim a tight bound.
+    """
+    gap = jnp.maximum(d[:, k:k + 1] - d[:, :k], 0.0)          # [Q,k]
+    sp, dp = spread_sel[:, :k], disp_sel[:, :k]
+    valid = d < BIG / 2                                       # [Q,k+1]
+    same = (lab[:, None, :] == lab[:, :, None]) & valid[:, None, :]
+    n_valid = jnp.maximum(jnp.sum(valid, axis=-1, keepdims=True), 1)
+    label_diff = 1.0 - jnp.sum(same, axis=-1) / n_valid       # [Q,k+1]
+    comp = spread_sel[:, k:k + 1]                             # [Q,1]
+    comp = jnp.where(
+        valid[:, k:k + 1] & jnp.isfinite(comp), comp, 0.0
+    )
+    p_disp = jnp.minimum(
+        KNN_BOUND_SLACK * (sp + comp) / jnp.maximum(gap, 1e-12), 1.0
+    )
+    p = jnp.clip(p_disp * label_diff[:, :k] + dp, 0.0, 1.0)
+    p = jnp.where(jnp.isinf(sp), 1.0, p)                      # unknown bucket
+    p = jnp.where(valid[:, :k], p, 1.0)                       # padded slot
+    bound = jnp.mean(p, axis=-1)
+    if hidden is not None:
+        kept_diff = jnp.where(valid[:, :k], label_diff[:, :k], 0.0)
+        bound = jnp.clip(
+            bound + hidden * jnp.max(kept_diff, axis=-1), 0.0, 1.0
+        )
+    return bound
+
+
+def _hidden_risk(
+    d_cent_masked: jax.Array, spread: jax.Array, bid: jax.Array,
+    d_radius: jax.Array, n_k: int,
+) -> jax.Array:
+    """[Q] risk that an unselected, unrefined bucket hides a true neighbour.
+
+    A bucket that survived neither refinement (masked to BIG) nor the
+    candidate top-k can still conceal points inside the kept radius when
+    its centroid distance minus its spread undercuts ``d_radius`` (the
+    first excluded candidate's distance).  Empty buckets are already BIG
+    in ``d_cent_masked``; the exact-candidate sentinel ``n_k`` never
+    matches a real bucket id.
+    """
+    sel = jnp.any(
+        bid[:, :, None] == jnp.arange(n_k, dtype=bid.dtype)[None, None, :],
+        axis=1,
+    )                                                         # [Q,K]
+    live = (d_cent_masked < BIG / 2) & ~sel
+    margin = jnp.maximum(d_cent_masked - d_radius[:, None], 1e-12)
+    risk = jnp.minimum(KNN_BOUND_SLACK * spread[None, :] / margin, 1.0)
+    return jnp.max(jnp.where(live, risk, 0.0), axis=-1)
+
+
+@partial(jax.jit, static_argnames=("k", "refine_budget", "with_bound"))
 def accurateml_map(
     train_x: jax.Array,
     train_y: jax.Array,
@@ -185,6 +307,7 @@ def accurateml_map(
     *,
     k: int,
     refine_budget: int,
+    with_bound: bool = False,
 ):
     """Algorithm 1 instantiated for kNN (per test-point refinement ranking).
 
@@ -199,14 +322,45 @@ def accurateml_map(
     [unrefined centroids ∪ refined originals], chained through one running
     k-best (centroids seed it, refined candidates fold in) instead of a
     concatenate + top_k tail.
+
+    With ``with_bound=True`` the output gains a per-query error bound
+    ([Q], see ``_vote_bound``) and returns ``(d, labels, bound)``.  The
+    selection then runs at k+1 internally (the bound needs the gap to the
+    first excluded candidate) and carries each candidate's *bucket id*
+    through the top-k merges packed next to its label
+    (``label * (K+1) + bucket``; refined originals use the exact-candidate
+    sentinel bucket K, which has zero spread/dispersion), so provenance
+    survives the streaming merges without a second kernel pass.
     """
     agg = knn_agg.agg
+    n_k = agg.means.shape[0]                                  # K (static)
+    kk = k + 1 if with_bound else k
+    if with_bound:
+        # Pack (label, bucket) into one int32 label channel; spread and
+        # dispersion gain a zero slot at index K for exact candidates.
+        cent_ids = jnp.arange(n_k, dtype=jnp.int32)
+        cent_comb = knn_agg.bucket_labels * jnp.int32(n_k + 1) + cent_ids
+        spread_ext = jnp.concatenate(
+            [knn_agg.spread, jnp.zeros((1,), jnp.float32)]
+        )
+        disp_ext = jnp.concatenate(
+            [knn_agg.dispersion, jnp.zeros((1,), jnp.float32)]
+        )
+
     if refine_budget <= 0:
         # Pure stage 1: fused distance+top-k over the aggregated points —
         # the [Q, K] matrix is never needed (no ranking to derive from it).
-        return kernel_ops.distance_topk(
-            test_x, agg.means, knn_agg.bucket_labels, agg.counts > 0, k=k
+        if not with_bound:
+            return kernel_ops.distance_topk(
+                test_x, agg.means, knn_agg.bucket_labels, agg.counts > 0, k=k
+            )
+        d, comb = kernel_ops.distance_topk(
+            test_x, agg.means, cent_comb, agg.counts > 0, k=kk
         )
+        bid = comb % jnp.int32(n_k + 1)
+        labels = comb // jnp.int32(n_k + 1)
+        bound = _vote_bound(d, labels, spread_ext[bid], disp_ext[bid], k)
+        return d[:, :k], labels[:, :k], bound
 
     # ---- stage 1: initial output + correlations from aggregated points ----
     # The full [Q, K] distances are inherent here: every bucket needs a
@@ -233,12 +387,28 @@ def accurateml_map(
 
     # Fused finalize: masked centroids seed the running k-best, refined
     # candidates merge into the same scratch (replaces concatenate+top_k).
-    best_d, best_l = kernel_ops.candidate_topk(
+    if not with_bound:
+        best_d, best_l = kernel_ops.candidate_topk(
+            d_cent_masked,
+            jnp.broadcast_to(knn_agg.bucket_labels[None, :], d_cent.shape),
+            k=k,
+        )
+        return kernel_ops.candidate_topk(d_ref, ref_y, best_d, best_l, k=k)
+
+    best_d, best_c = kernel_ops.candidate_topk(
         d_cent_masked,
-        jnp.broadcast_to(knn_agg.bucket_labels[None, :], d_cent.shape),
-        k=k,
+        jnp.broadcast_to(cent_comb[None, :], d_cent.shape),
+        k=kk,
     )
-    return kernel_ops.candidate_topk(d_ref, ref_y, best_d, best_l, k=k)
+    ref_comb = ref_y * jnp.int32(n_k + 1) + jnp.int32(n_k)
+    d, comb = kernel_ops.candidate_topk(d_ref, ref_comb, best_d, best_c, k=kk)
+    bid = comb % jnp.int32(n_k + 1)
+    labels = comb // jnp.int32(n_k + 1)
+    hidden = _hidden_risk(d_cent_masked, knn_agg.spread, bid, d[:, k], n_k)
+    bound = _vote_bound(
+        d, labels, spread_ext[bid], disp_ext[bid], k, hidden=hidden
+    )
+    return d[:, :k], labels[:, :k], bound
 
 
 # ---------------------------------------------------------------------------
@@ -366,6 +536,8 @@ class KNNServable(serve_servable.LSHServableBase):
         return KNNAggregates(
             agg=dataclasses.replace(prepared.agg, means=means),
             bucket_labels=prepared.bucket_labels,
+            spread=prepared.spread,
+            dispersion=prepared.dispersion,
         )
 
     def probe_payload(self) -> tuple:
@@ -383,11 +555,18 @@ class KNNServable(serve_servable.LSHServableBase):
         def reduce_fn(g):
             # Keep the merged top-k (distances, labels) next to the vote:
             # the vote is the answer, the neighbour sets feed the stage-1 vs
-            # refined accuracy proxy (top-k label-overlap divergence).
+            # refined accuracy proxy (top-k label-overlap divergence).  The
+            # per-query bound merges via max across shards — the claim must
+            # hold for every shard's contribution to the merged answer.
             d, l = merge_topk(g[0], g[1], self.k)
-            return d, l, majority_vote(d, l, self.n_classes)
+            return d, l, majority_vote(d, l, self.n_classes), jnp.max(
+                g[2], axis=0
+            )
 
-        map_fn = partial(accurateml_map, k=self.k, refine_budget=refine_budget)
+        map_fn = partial(
+            accurateml_map, k=self.k, refine_budget=refine_budget,
+            with_bound=True,
+        )
         combine = engine_lib.CombineSpec(
             mode="all_gather", reduce_fn=reduce_fn,
         )
@@ -398,6 +577,18 @@ class KNNServable(serve_servable.LSHServableBase):
 
     def unpack(self, outputs: tuple, n: int) -> list:
         return [int(v) for v in np.asarray(outputs[2][:n])]
+
+    def error_bounds(self, stage1_out, n: int) -> list:
+        """Per-query claimed bound on label divergence of the stage-1 vote."""
+        bounds = np.asarray(stage1_out[3][:n])
+        return [
+            ErrorBound(
+                value=float(b),
+                metric="label_divergence",
+                confidence=KNN_BOUND_CONFIDENCE,
+            )
+            for b in bounds
+        ]
 
     def accuracy_proxy(self, stage1_out, refined_out, n: int) -> list[float]:
         """1 - (top-k label multiset overlap / k) per query.

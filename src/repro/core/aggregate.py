@@ -222,6 +222,77 @@ def aggregate_nested(
     )
 
 
+# ---------------------------------------------------------------------------
+# second-moment sufficient statistics (error bounds)
+#
+# Like the segment sums above, these are *additive* under bucket union, so
+# `merge_levels`, StreamingAggregate delta-ingest, and npz snapshot/restore
+# carry them unchanged — every pyramid level's derived spread re-computes
+# exactly from merged statistics.  From them each stage-1 answer gets a
+# cheap per-query uncertainty (within-bucket spread for kNN distances,
+# label-histogram dispersion for votes, rating variance for CF).
+#
+# Empty-bucket contract: a zero-centroid empty bucket has *unknown* content,
+# so its spread/dispersion is +inf — never zero or NaN — and an answer
+# leaning on it can never satisfy an accuracy-SLO.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_buckets",))
+def bucket_sumsq(
+    data: jax.Array, ids: jax.Array, n_buckets: int
+) -> jax.Array:
+    """[N,D] -> [K,D] per-bucket Σ x² per feature (additive)."""
+    x = data.astype(jnp.float32)
+    return jax.ops.segment_sum(x * x, ids, num_segments=n_buckets)
+
+
+@jax.jit
+def bucket_spread(
+    sums: jax.Array, sumsq: jax.Array, counts: jax.Array
+) -> jax.Array:
+    """[K,D] sums, [K,D] sumsq, [K] counts -> [K] within-bucket spread.
+
+    Spread is the mean squared deviation from the centroid summed over
+    features (the trace of the bucket covariance): E‖x − μ‖².  Empty
+    buckets report +inf (unknown content), never 0 or NaN.
+    """
+    n = jnp.maximum(counts.astype(jnp.float32), 1.0)[:, None]
+    mean = sums / n
+    var = jnp.maximum(sumsq / n - mean * mean, 0.0)
+    spread = jnp.sum(var, axis=-1)
+    return jnp.where(counts > 0, spread, jnp.inf)
+
+
+@jax.jit
+def histogram_dispersion(hist: jax.Array) -> jax.Array:
+    """[K,C] label histogram -> [K] 1 − majority fraction.
+
+    0 = the bucket is label-pure (its majority label is certain); 0.5 = a
+    coin flip.  Empty buckets report +inf: a vote sourced from an empty
+    bucket is unknown, not certain.
+    """
+    total = jnp.sum(hist, axis=-1)
+    top = jnp.max(hist, axis=-1)
+    disp = 1.0 - top / jnp.maximum(total, 1.0)
+    return jnp.where(total > 0, disp, jnp.inf)
+
+
+@jax.jit
+def centered_second_moment(
+    s: jax.Array, s2: jax.Array, c: jax.Array
+) -> jax.Array:
+    """Elementwise Σ(x − mean)² = s2 − s²/c, clipped to >= 0.
+
+    ``s``/``s2``/``c`` are parallel additive statistics (sum, sum of
+    squares, count) of the same shape; cells with c == 0 yield 0 (they
+    carry no mass, so they contribute nothing to a variance-weighted
+    combination — the *bucket-level* empty contract lives in
+    ``bucket_spread``/``histogram_dispersion``, which report +inf).
+    """
+    n = jnp.maximum(c, 1.0)
+    return jnp.maximum(s2 - (s * s) / n, 0.0)
+
+
 @partial(jax.jit, static_argnames=("budget",))
 def refinement_indices(
     agg: AggregatedData, ranking: jax.Array, budget: int

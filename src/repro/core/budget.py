@@ -19,11 +19,19 @@ import dataclasses
 
 @dataclasses.dataclass
 class CostModel:
-    """Linear per-point cost model of one map shard, seconds."""
+    """Linear per-point cost model of one map shard, seconds.
+
+    ``stage2_fitted`` distinguishes a *constructed* zero ``c_stage2``
+    (caller asserts stage 2 is free — keep the permissive all-or-nothing
+    solve) from a *measured* non-positive stage-2 delta in ``fit`` (probe
+    noise gave ``t_eps1 <= t_eps0``: the model learned nothing about
+    stage-2 cost and must grant conservatively, never ``eps_max``).
+    """
 
     c_fixed: float = 0.0     # LSH + aggregation + dispatch overhead
     c_stage1: float = 0.0    # per aggregated point
     c_stage2: float = 0.0    # per refined original point
+    stage2_fitted: bool = True
 
     def predict(self, n_points: int, compression_ratio: float, eps: float) -> float:
         k = n_points / max(compression_ratio, 1.0)
@@ -37,6 +45,13 @@ class CostModel:
         k = n_points / max(compression_ratio, 1.0)
         spare = time_budget - self.c_fixed - self.c_stage1 * k
         if self.c_stage2 <= 0 or n_points == 0:
+            if not self.stage2_fitted:
+                # Degenerate fit: stage-2 cost is unknown, not zero.  An
+                # unbounded budget (the re-execution path) may still refine
+                # fully; any *finite* budget gets the conservative grant —
+                # the old `spare >= 0 -> eps_max` answer handed a straggler
+                # a full-eps grant precisely when it had to degrade.
+                return eps_max if spare == float("inf") else 0.0
             return eps_max if spare >= 0 else 0.0
         eps = spare / (self.c_stage2 * n_points)
         return float(min(max(eps, 0.0), eps_max))
@@ -51,11 +66,20 @@ class CostModel:
         eps1: float,
         t_fixed: float = 0.0,
     ) -> "CostModel":
-        """Fit from two probes: one run at eps=0 and one at eps=eps1 > 0."""
+        """Fit from two probes: one run at eps=0 and one at eps=eps1 > 0.
+
+        A non-positive measured stage-2 delta (probe noise) marks the model
+        ``stage2_fitted=False`` so ``solve_eps`` cannot grant ``eps_max``
+        off a cost term it never observed.
+        """
         k = n_points / max(compression_ratio, 1.0)
+        delta = t_eps1 - t_eps0
         c_stage1 = max(t_eps0 - t_fixed, 0.0) / max(k, 1.0)
-        c_stage2 = max(t_eps1 - t_eps0, 0.0) / max(eps1 * n_points, 1.0)
-        return cls(c_fixed=t_fixed, c_stage1=c_stage1, c_stage2=c_stage2)
+        c_stage2 = max(delta, 0.0) / max(eps1 * n_points, 1.0)
+        return cls(
+            c_fixed=t_fixed, c_stage1=c_stage1, c_stage2=c_stage2,
+            stage2_fitted=delta > 0.0 and eps1 * n_points > 0,
+        )
 
 
 @dataclasses.dataclass

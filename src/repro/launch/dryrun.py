@@ -254,7 +254,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         for k, v in batch_shape.items()
     }
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if shape_cfg.kind == "train":
         opt_cfg = optim.AdamWConfig()
         opt_shape = jax.eval_shape(optim.init_state, params_shape)
@@ -292,7 +292,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         lowered = jitted.lower(params_shape, caches_shape, batch_shape)
 
     compiled = lowered.compile()
-    compile_s = time.time() - t0
+    compile_s = time.perf_counter() - t0
 
     mem = {}
     try:

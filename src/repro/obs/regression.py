@@ -88,6 +88,16 @@ DEFAULT_SPECS: tuple[MetricSpec, ...] = (
                "higher", tolerance=0.0),
     MetricSpec("chaos_soak.answered_fraction",
                "higher", tolerance=0.0),
+    # Error-bound honesty (benchmarks/error_bounds.py): worst-case claimed-CI
+    # coverage against exact results must never slide below the stated
+    # confidence, and the accuracy-SLO skip path must keep buying latency.
+    # Coverage is a fraction of queries — absolute band, no relative slack.
+    MetricSpec("error_bounds.knn_coverage",
+               "higher", tolerance=0.0, absolute=0.05),
+    MetricSpec("error_bounds.cf_coverage",
+               "higher", tolerance=0.0, absolute=0.05),
+    MetricSpec("error_bounds.serving.latency_win",
+               "higher", tolerance=0.35, absolute=0.5),
 )
 
 

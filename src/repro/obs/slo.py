@@ -123,11 +123,24 @@ class LatencyObjective(Objective):
 class AccuracyObjective(Objective):
     """Accuracy-proxy floor: stage-1 vs refined divergence must stay under
     ``max_divergence`` for ``target`` of refined requests — the live side
-    of the paper's accuracy-loss axis."""
+    of the paper's accuracy-loss axis.
+
+    With ``use_claimed_bound=True`` the objective instead reads the
+    measured bound-vs-SLO verdicts (the ``bound_held`` / ``bound_checked``
+    counters ``ServeMetrics`` rolls up per accuracy-SLO request): attainment
+    of the *claimed* ``ErrorBound`` contract, so a drifting calibration
+    (claims stop covering max_error) burns the same alert machinery as a
+    latency SLO."""
 
     max_divergence: float = 0.5
+    use_claimed_bound: bool = False
 
     def good_total(self, rollup, windows):
+        if self.use_claimed_bound:
+            return (
+                rollup.total("bound_held", windows),
+                rollup.total("bound_checked", windows),
+            )
         xs = rollup.values("accuracy_proxy", windows)
         return (sum(1 for v in xs if v <= self.max_divergence), len(xs))
 

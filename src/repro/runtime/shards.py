@@ -182,6 +182,11 @@ class ShardedServable:
     def accuracy_proxy(self, stage1_out, refined_out, n: int) -> list[float]:
         return self.shards[0].accuracy_proxy(stage1_out, refined_out, n)
 
+    def error_bounds(self, stage1_out, n: int) -> list:
+        # The merge already folded per-shard bounds conservatively (max),
+        # so shard 0's decoder reads the merged channel directly.
+        return self.shards[0].error_bounds(stage1_out, n)
+
     # ------------------------------------------------------------------
     # deadline propagation (server hook)
     # ------------------------------------------------------------------
@@ -433,6 +438,9 @@ def sharded_knn(
         d = jnp.stack([o[0] for o in outs])
         l = jnp.stack([o[1] for o in outs])
         md, ml = knn_lib.merge_topk(d, l, k)
-        return md, ml, knn_lib.majority_vote(md, ml, n_classes)
+        # Conservative bound merge: the claim must dominate every surviving
+        # shard's contribution to the merged answer.
+        mb = jnp.max(jnp.stack([o[3] for o in outs]), axis=0)
+        return md, ml, knn_lib.majority_vote(md, ml, n_classes), mb
 
     return ShardedServable(shards, merge_fn, **sharded_kwargs)

@@ -136,6 +136,46 @@ class DeadlineController:
             predicted_s=predicted,
         )
 
+    def boost_for_accuracy(
+        self, kind: str, n_points: int, remaining_budget_s: float,
+        *, base_eps: float,
+    ) -> Grant | None:
+        """Accuracy-SLO escalation: refine *past* the default grant.
+
+        Called after stage 1 when a request's claimed ``ErrorBound`` missed
+        its ``max_error``: solve for the largest grid eps the remaining
+        deadline slack still affords, with the ceiling lifted from
+        ``policy.eps_max`` to the top of the grid (the latency knob yields
+        to the accuracy knob, but only inside the deadline).  Returns None
+        when uncalibrated or when nothing strictly above ``base_eps`` fits
+        — the caller keeps the original grant.
+
+        No ``stage1_passes`` reservation here: stage 1 already ran, and
+        ``solve_eps`` models exactly the one remaining two-stage pass.
+        """
+        model = self.models.get(kind)
+        if model is None:
+            return None
+        policy = self.policy
+        corr = self._correction.get(kind, 1.0)
+        budget = remaining_budget_s * self.safety / max(corr, 1e-9)
+        eps = self.snap_eps(model.solve_eps(
+            n_points, policy.compression_ratio, budget,
+            eps_max=self.eps_grid[-1],
+        ))
+        if eps <= base_eps:
+            return None
+        predicted = corr * model.predict(
+            n_points, policy.compression_ratio, eps
+        )
+        return Grant(
+            compression_ratio=policy.compression_ratio,
+            eps=eps,
+            refine_budget=eps_to_budget(n_points, eps),
+            escalate=False,
+            predicted_s=predicted,
+        )
+
     def deadline_for(
         self, kind: str, n_points: int, eps: float, *, stage1_passes: int = 2,
     ) -> float:

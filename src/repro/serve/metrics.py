@@ -141,6 +141,20 @@ class ServeMetrics:
             "Stage-1 vs refined divergence (0 = refinement changed nothing).",
             labels=("kind",), capacity=capacity,
         )
+        self._error_bound = r.reservoir(
+            "serve_error_bound",
+            "Claimed stage-1 ErrorBound.value per response (finite only).",
+            labels=("kind",), capacity=capacity,
+        )
+        self._refine_skipped = r.counter(
+            "serve_refine_skipped_total",
+            "Batches whose stage 2 was skipped because every request's "
+            "claimed bound already met its accuracy SLO (latency win).",
+        )
+        self._accuracy_boost = r.counter(
+            "serve_accuracy_boost_total",
+            "Batches refined past the default grant to chase a max_error.",
+        )
 
     # ------------------------------------------------------------------
     def record(self, response: Response) -> None:
@@ -163,6 +177,16 @@ class ServeMetrics:
             self._accuracy.labels(kind=kind).observe(proxy)
             if roll is not None:
                 roll.observe("accuracy_proxy", proxy)
+        bound = getattr(response, "error_bound", None)
+        if bound is not None and math.isfinite(bound.value):
+            self._error_bound.labels(kind=kind).observe(bound.value)
+        # Accuracy-SLO verdicts feed the claimed-bound burn-rate channel:
+        # bound_held / bound_checked is the windowed attainment ratio the
+        # AccuracyObjective can alert on (use_claimed_bound=True).
+        if response.accuracy_met is not None and roll is not None:
+            roll.count("bound_checked")
+            if response.accuracy_met:
+                roll.count("bound_held")
         if response.reexecuted:
             self._reexecutions.labels(kind=kind).inc()
             return
@@ -195,6 +219,15 @@ class ServeMetrics:
         self._occupancy.inc(occupancy)
         if cache_source is not None:
             self._cache_source.labels(source=cache_source).inc()
+
+    def record_accuracy_decision(
+        self, *, skipped: bool = False, boosted: bool = False
+    ) -> None:
+        """One batch's accuracy-SLO outcome (skip-early or boost)."""
+        if skipped:
+            self._refine_skipped.inc()
+        if boosted:
+            self._accuracy_boost.inc()
 
     def reset(self) -> None:
         """Drop all records (e.g. after a jit/cache warmup phase)."""
@@ -301,6 +334,21 @@ class ServeMetrics:
                 "mean": acc["mean"],
                 "p50": acc["p50"],
                 "max": acc["max"],
+            }
+        bound = self._error_bound.merged_stats()
+        if bound["count"]:
+            out["error_bound"] = {
+                "n": bound["count"],
+                "mean": bound["mean"],
+                "p50": bound["p50"],
+                "max": bound["max"],
+            }
+        n_skipped = int(self._refine_skipped.value)
+        n_boosted = int(self._accuracy_boost.value)
+        if n_skipped or n_boosted:
+            out["accuracy_slo"] = {
+                "refine_skipped_batches": n_skipped,
+                "boosted_batches": n_boosted,
             }
         if cache_stats is not None:
             out["cache"] = dict(cache_stats)

@@ -29,6 +29,27 @@ drops are bugs, degraded answers are not:
     exhausted, or the load-shed ladder is maxed and the admission queue
     full).  Carries ``retry_after_s``; the request never entered the
     batcher.
+
+The accuracy-SLO contract (what ``max_error`` buys, next to the latency SLO)
+----------------------------------------------------------------------------
+Every stage-1 answer carries a typed ``ErrorBound``: a *claimed* upper
+bound on the answer's divergence from the exact result (the same metric as
+the accuracy proxy — kNN label divergence, CF rating error), derived from
+the per-bucket second-moment sufficient statistics, valid at the bound's
+stated ``confidence``.  A request may additionally set ``max_error`` — an
+accuracy SLO next to the latency SLO ``deadline_s``.  The server trades
+the two off explicitly:
+
+  * bound already <= ``max_error`` after stage 1 -> refinement is *skipped*
+    (``Response.refine_skipped``) — a latency win purchased with the bound;
+  * bound > ``max_error`` and deadline slack remains -> the controller may
+    *boost* eps past the default grant to chase the accuracy SLO;
+  * neither is an error: the answer is still anytime-total, and
+    ``Response.accuracy_met`` records whether the claim satisfied the SLO.
+
+``max_error`` never causes a drop or a refusal; empty/unknown buckets
+report infinite uncertainty, so an unknown answer can never satisfy an
+accuracy SLO by accident.
 """
 from __future__ import annotations
 
@@ -40,9 +61,31 @@ from typing import Any, Callable, Hashable, Protocol, Sequence, runtime_checkabl
 _rid_counter = itertools.count()
 
 
+@dataclasses.dataclass(frozen=True)
+class ErrorBound:
+    """Claimed upper bound on a stage-1 answer's divergence from exact.
+
+    ``value`` is in the units of ``metric`` (the servable's accuracy-proxy
+    metric: kNN "label_divergence" in [0,1], CF "rating_mae" in rating
+    units); ``confidence`` is the claimed coverage level — the fraction of
+    queries whose observed error the bound should dominate, calibrated by
+    ``benchmarks/error_bounds.py``.  ``float("inf")`` means *unknown*
+    (empty bucket, pre-second-moment snapshot) and can never satisfy an
+    accuracy SLO.
+    """
+
+    value: float
+    metric: str
+    confidence: float = 0.9
+
+    def met(self, max_error: float | None) -> bool:
+        """Does this claim satisfy an accuracy SLO? (None -> trivially yes)."""
+        return max_error is None or self.value <= max_error
+
+
 @dataclasses.dataclass
 class Request:
-    """One admitted query with a latency SLO."""
+    """One admitted query with a latency SLO (and optional accuracy SLO)."""
 
     kind: str                    # servable name ("knn", "cf", ...)
     payload: tuple               # per-query arrays (servable-specific)
@@ -51,6 +94,9 @@ class Request:
     rid: int = dataclasses.field(default_factory=lambda: next(_rid_counter))
     reexecution: bool = False    # escalated re-run of an earlier request
     on_stage1: Callable[[int, Any], None] | None = None
+    # Accuracy SLO: claimed ErrorBound.value must be <= this, in the
+    # servable's bound metric.  None = latency SLO only (default).
+    max_error: float | None = None
 
     def remaining(self, now: float) -> float:
         return self.deadline_s - (now - self.arrival_t)
@@ -82,6 +128,15 @@ class Response:
     # Non-empty means the answer was merged from the surviving shards only:
     # a *degraded* answer under the anytime contract, never an error.
     partial_shards: tuple[int, ...] = ()
+    # Claimed confidence interval on the stage-1 answer (None only when the
+    # servable predates the bound contract).
+    error_bound: ErrorBound | None = None
+    # Accuracy-SLO verdict: None = no max_error on the request; otherwise
+    # whether the claimed bound satisfied it.
+    accuracy_met: bool | None = None
+    # Stage 2 skipped because the bound already met the accuracy SLO —
+    # the metered latency win of the error-bound contract.
+    refine_skipped: bool = False
 
     @property
     def answer(self) -> Any:
@@ -134,6 +189,14 @@ class Servable(Protocol):
     changed nothing).  It is *not* part of this protocol's required surface
     — the server discovers it with ``getattr`` and records it into the
     metrics' accuracy-proxy channel when present.
+
+    Similarly optional: ``error_bounds(stage1_out, n) -> list[ErrorBound]``
+    returning one *claimed* confidence interval per request, computed from
+    the stage-1 outputs alone (the per-bucket second-moment statistics ride
+    inside the prepared aggregates).  When present, the server attaches the
+    bounds to every ``Response`` and uses them to honor ``max_error``
+    accuracy SLOs (skip refinement early / boost eps); when absent,
+    ``Response.error_bound`` stays None and ``max_error`` is ignored.
     """
 
     name: str

@@ -103,12 +103,14 @@ class Server:
     def submit(
         self, kind: str, payload: tuple, deadline_s: float,
         *, on_stage1: Callable[[int, Any], None] | None = None,
+        max_error: float | None = None,
     ) -> int:
         if kind not in self.servables:
             raise KeyError(f"unknown workload kind: {kind!r}")
         req = Request(
             kind=kind, payload=payload, deadline_s=deadline_s,
             arrival_t=self.clock(), on_stage1=on_stage1,
+            max_error=max_error,
         )
         self.batcher.submit(req)
         return req.rid
@@ -288,11 +290,6 @@ class Server:
                 [r.payload for r in batch.requests], batch.padded_size
             )
             combos = {(batch.kind, batch.padded_size, 0)}
-            if grant.refine_budget > 0:
-                combos.add(
-                    (batch.kind, batch.padded_size, grant.refine_budget)
-                )
-            warmed = combos <= self._seen_combos
             shuffle_bytes = 0
 
             # ---- stage 1: immediate aggregated answers ----
@@ -308,17 +305,61 @@ class Server:
                 if req.on_stage1 is not None:
                     req.on_stage1(req.rid, ans)
 
+            # ---- accuracy SLO: trade the bound against the grant ----
+            # The servable's claimed per-request ErrorBounds (optional
+            # surface, like accuracy_proxy) are read off the stage-1
+            # outputs; when every request carries a max_error the bound
+            # already satisfies, stage 2 is skipped outright (the metered
+            # latency win); when some bound misses and deadline slack
+            # remains, the controller may boost eps past the default grant.
+            bounds_fn = getattr(servable, "error_bounds", None)
+            bounds = (
+                bounds_fn(s1_out, batch.n) if bounds_fn is not None else None
+            )
+            eps_used = grant.eps
+            refine_budget = grant.refine_budget
+            refine_skipped = False
+            boosted = False
+            if bounds is not None and not reexecution:
+                maxes = [r.max_error for r in batch.requests]
+                met = [b.met(m) for b, m in zip(bounds, maxes)]
+                if (
+                    refine_budget > 0
+                    and all(m is not None for m in maxes)
+                    and all(met)
+                ):
+                    refine_skipped = True
+                    refine_budget = 0
+                elif (
+                    not grant.escalate
+                    and any(m is not None and not ok
+                            for m, ok in zip(maxes, met))
+                ):
+                    boost = self.controller.boost_for_accuracy(
+                        batch.kind, servable.n_points,
+                        batch.min_remaining(self.clock()),
+                        base_eps=grant.eps,
+                    )
+                    if boost is not None:
+                        boosted = True
+                        eps_used = boost.eps
+                        refine_budget = boost.refine_budget
+            if refine_budget > 0:
+                combos.add((batch.kind, batch.padded_size, refine_budget))
+            warmed = combos <= self._seen_combos
+
             # ---- stage 2: refine if the grant left budget for it ----
             refined_answers: list[Any] | None = None
             proxies: list[float] | None = None
-            if grant.refine_budget > 0:
+            if refine_budget > 0:
                 with tracer.span(
-                    "stage2.refine", refine_budget=grant.refine_budget
+                    "stage2.refine", refine_budget=refine_budget,
+                    boosted=boosted,
                 ) as s2_sp:
                     ref_out = jax.block_until_ready(
                         servable.run(
                             prepared, padded,
-                            refine_budget=grant.refine_budget,
+                            refine_budget=refine_budget,
                         )
                     )
                     s2_sp.set(shuffle_bytes=servable.last_shuffle_bytes)
@@ -340,8 +381,9 @@ class Server:
 
             # Cold batches (fresh compile or aggregate build) are deploy
             # cost, not steady-state serving cost: keep them out of the
-            # correction.
-            if warmed and cache_hit:
+            # correction — as are accuracy-SLO deviations (skip/boost),
+            # whose wall time no longer matches the grant's prediction.
+            if warmed and cache_hit and refine_budget == grant.refine_budget:
                 self.controller.observe(
                     batch.kind, grant.predicted_s, t_end - t_start
                 )
@@ -349,9 +391,14 @@ class Server:
             self.metrics.record_batch(
                 shuffle_bytes, occupancy=batch.n, cache_source=cache_source
             )
+            if refine_skipped or boosted:
+                self.metrics.record_accuracy_decision(
+                    skipped=refine_skipped, boosted=boosted
+                )
             root.set(
-                eps=grant.eps, shuffle_bytes=shuffle_bytes,
+                eps=eps_used, shuffle_bytes=shuffle_bytes,
                 refined=refined_answers is not None,
+                refine_skipped=refine_skipped, boosted=boosted,
             )
 
             responses = []
@@ -361,12 +408,13 @@ class Server:
                     t_end - req.arrival_t if refined_answers is not None
                     else stage1_latency
                 )
+                bound = bounds[i] if bounds is not None else None
                 resp = Response(
                     rid=req.rid,
                     kind=req.kind,
                     stage1=stage1_answers[i],
                     refined=refined_answers[i] if refined_answers else None,
-                    eps_granted=grant.eps,
+                    eps_granted=eps_used,
                     compression_ratio=grant.compression_ratio,
                     deadline_s=req.deadline_s,
                     queue_wait_s=t_start - req.arrival_t,
@@ -381,6 +429,13 @@ class Server:
                         float(proxies[i]) if proxies is not None else None
                     ),
                     partial_shards=partial_shards,
+                    error_bound=bound,
+                    accuracy_met=(
+                        bound.met(req.max_error)
+                        if bound is not None and req.max_error is not None
+                        else None
+                    ),
+                    refine_skipped=refine_skipped,
                 )
                 responses.append(resp)
                 self.metrics.record(resp)

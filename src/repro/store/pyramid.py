@@ -6,9 +6,11 @@ builds the *finest* level once (nested LSH ids, ``repro.core.lsh``) and
 derives every coarser ratio by merging sufficient statistics:
 
   * additive per-bucket statistics (segment sums, counts, label histograms,
-    CF rating sums ...) merge with ``core.aggregate.merge_levels`` — a
-    reshape + axis-sum, exact to the bit for the stats and therefore for
-    the weighted means derived from them;
+    CF rating sums, and the *second moments* — feature ``sumsq``, CF
+    ``sr2`` — behind the per-answer error bounds) merge with
+    ``core.aggregate.merge_levels`` — a reshape + axis-sum, exact to the
+    bit for the stats and therefore for the weighted means, spreads, and
+    dispersions derived from them;
   * the perm/offsets index coarsens in O(K) with ``coarsen_index`` — the
     permutation is *shared* by all levels because sorting by fine id also
     sorts by every nested coarse id.

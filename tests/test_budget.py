@@ -74,6 +74,42 @@ def test_shard_eps_respects_eps_max():
     assert policy.shard_eps(m, 10_000, remaining_budget=0.0) == 0.0
 
 
+def test_fit_noisy_probe_is_conservative():
+    """Headline regression: a non-positive stage-2 probe delta (t_eps1 <=
+    t_eps0, pure noise) must not let solve_eps grant eps_max off a cost
+    term it never observed — the old `spare >= 0 -> eps_max` answer handed
+    a straggler a full-eps grant precisely when it had to degrade."""
+    n, r = 10_000, 20.0
+    noisy = CostModel.fit(n, r, t_eps0=0.010, t_eps1=0.009, eps1=0.25)
+    assert noisy.c_stage2 == 0.0 and not noisy.stage2_fitted
+    # Exhausted-but-nonnegative finite budget: conservative zero grant.
+    assert noisy.solve_eps(n, r, 100.0, eps_max=0.4) == 0.0
+    assert noisy.solve_eps(n, r, 0.0, eps_max=0.4) == 0.0
+    assert noisy.solve_eps(n, r, -1.0, eps_max=0.4) == 0.0
+    # The re-execution path (unbounded budget) still refines fully.
+    assert noisy.solve_eps(n, r, float("inf"), eps_max=0.4) == 0.4
+    # Equal probes are just as unobserved as inverted ones.
+    assert not CostModel.fit(n, r, 0.01, 0.01, 0.25).stage2_fitted
+    # n == 0 gives the fit nothing to divide by: also unfitted.
+    assert not CostModel.fit(0, r, 0.01, 0.02, 0.25).stage2_fitted
+
+
+def test_constructed_zero_stage2_stays_permissive():
+    """A *constructed* zero c_stage2 asserts stage 2 is free: the
+    all-or-nothing solve on the spare sign is intended behavior there."""
+    free = CostModel(c_fixed=0.0, c_stage1=1e-5, c_stage2=0.0)
+    assert free.stage2_fitted
+    assert free.solve_eps(1_000, 10.0, 1.0, eps_max=0.7) == 0.7
+    assert free.solve_eps(1_000, 10.0, -1.0, eps_max=0.7) == 0.0
+
+
+def test_solve_eps_zero_points():
+    """n_points == 0 kills the stage-2 term: all-or-nothing on spare."""
+    m = CostModel(c_fixed=1e-4, c_stage1=1e-5, c_stage2=1e-6)
+    assert m.solve_eps(0, 10.0, 1.0, eps_max=0.5) == 0.5
+    assert m.solve_eps(0, 10.0, 0.0, eps_max=0.5) == 0.0  # spare < 0
+
+
 def test_eps_to_budget_is_host_side_int():
     """Satellite regression: budget must be a plain Python int (static shape)."""
     b = eps_to_budget(1000, 0.1)

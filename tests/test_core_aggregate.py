@@ -54,6 +54,53 @@ def test_counts_sum_to_n():
     assert int(agg.counts.sum()) == 333
 
 
+def test_bucket_sumsq_matches_numpy():
+    data, ids, k = _random_case(19)
+    ss = agg_lib.bucket_sumsq(data, ids, k)
+    dn, idn = np.asarray(data), np.asarray(ids)
+    for b in range(k):
+        np.testing.assert_allclose(
+            np.asarray(ss[b]), (dn[idn == b] ** 2).sum(0),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+def test_empty_bucket_uncertainty_is_infinite():
+    """Empty buckets report +inf spread/dispersion — never 0 or NaN.  A
+    zero claim from a bucket with no members would let an error bound
+    assert certainty about unknown content; pinned alongside the
+    BIG-sentinel masking of empty centroids in the distance kernels."""
+    data = jnp.asarray(np.random.RandomState(0).randn(20, 4), jnp.float32)
+    ids = jnp.zeros((20,), jnp.int32)              # only bucket 0 populated
+    k = 4
+    counts = jax.ops.segment_sum(
+        jnp.ones((20,), jnp.int32), ids, num_segments=k
+    )
+    sums = jax.ops.segment_sum(data, ids, num_segments=k)
+    sumsq = agg_lib.bucket_sumsq(data, ids, k)
+    spread = np.asarray(agg_lib.bucket_spread(sums, sumsq, counts))
+    assert np.isfinite(spread[0]) and spread[0] > 0
+    assert np.isinf(spread[1:]).all()
+    assert not np.isnan(spread).any()
+
+    hist = jnp.zeros((k, 3)).at[0, 1].set(5.0)     # pure bucket 0, rest empty
+    disp = np.asarray(agg_lib.histogram_dispersion(hist))
+    assert disp[0] == 0.0                          # label-pure: certain
+    assert np.isinf(disp[1:]).all()
+    assert not np.isnan(disp).any()
+
+
+def test_centered_second_moment_clamps_negative_noise():
+    """fp cancellation (s2 slightly under s²/c) must clip to 0, and c == 0
+    cells yield 0 mass — the bucket-level empty contract lives in
+    bucket_spread/histogram_dispersion, not here."""
+    s = jnp.asarray([[3.0], [0.0]])
+    s2 = jnp.asarray([[2.9], [0.0]])               # < 3²/3 = 3.0
+    c = jnp.asarray([[3.0], [0.0]])
+    cv = np.asarray(agg_lib.centered_second_moment(s, s2, c))
+    assert (cv >= 0).all() and cv[1, 0] == 0.0
+
+
 def test_refinement_indices_walk_ranked_buckets():
     data, ids, k = _random_case(11, n=100, k=10)
     agg = agg_lib.aggregate_by_bucket(data, ids, k)

@@ -1,0 +1,231 @@
+"""Tests for the error-bound output contract: bound math at the map level,
+bit-identity of the with_bound paths, and the serving-side accuracy SLO
+(skip refinement early / boost eps past the default grant)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import cf as cf_lib
+from repro.apps import knn as knn_lib
+from repro.apps.cf import CFServable
+from repro.apps.knn import KNNServable
+from repro.core import aggregate as agg_lib
+from repro.core import lsh as lsh_lib
+from repro.core.budget import BudgetPolicy, CostModel
+from repro.serve import ContinuousBatcher, DeadlineController, Server
+from repro.serve.request import ErrorBound
+
+N, D, C, K = 256, 8, 5, 3
+N_CF, I_CF = 96, 24
+
+
+# ---------------------------------------------------------------------------
+# ErrorBound type
+# ---------------------------------------------------------------------------
+
+def test_error_bound_met_semantics():
+    b = ErrorBound(value=0.2, metric="label_divergence")
+    assert b.met(None)            # no accuracy SLO: trivially satisfied
+    assert b.met(0.2)             # boundary is inclusive
+    assert not b.met(0.1)
+    unknown = ErrorBound(value=float("inf"), metric="label_divergence")
+    assert not unknown.met(1e18)  # unknown can never satisfy a finite SLO
+    assert unknown.met(None)
+
+
+# ---------------------------------------------------------------------------
+# map-level: bit-identity and bound math
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def knn_data():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (N, D))
+    y = jax.random.randint(jax.random.fold_in(key, 1), (N,), 0, C)
+    cfg = lsh_lib.LSHConfig(n_hashes=4, bucket_width=4.0, n_buckets=32)
+    params = lsh_lib.init_lsh(jax.random.PRNGKey(7), D, cfg)
+    return x, y, knn_lib.build_knn_aggregates(x, y, params, C)
+
+
+def test_knn_with_bound_preserves_answers(knn_data):
+    """with_bound=True must return the identical (d, labels) as the plain
+    path — the bound rides along, it never changes the answer."""
+    x, y, agg = knn_data
+    q = x[:16]
+    for budget in (0, 40):
+        d0, l0 = knn_lib.accurateml_map(
+            x, y, agg, q, k=K, refine_budget=budget
+        )
+        d1, l1, b = knn_lib.accurateml_map(
+            x, y, agg, q, k=K, refine_budget=budget, with_bound=True
+        )
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+        np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+        bn = np.asarray(b)
+        assert bn.shape == (16,)
+        assert ((bn >= 0.0) & (bn <= 1.0)).all() and not np.isnan(bn).any()
+
+
+def test_knn_full_refinement_claims_zero(knn_data):
+    """A budget covering every point makes the answer exact — the claimed
+    divergence bound must collapse to 0, not linger at stage-1 levels."""
+    x, y, agg = knn_data
+    _, _, b = knn_lib.accurateml_map(
+        x, y, agg, x[:8], k=K, refine_budget=N, with_bound=True
+    )
+    np.testing.assert_array_equal(np.asarray(b), 0.0)
+
+
+def test_vote_bound_saturates_on_unknown_spread():
+    """+inf spread (empty bucket / pre-second-moment snapshot) and padded
+    BIG slots must claim probability 1 — never a tight bound."""
+    k = 2
+    d = jnp.asarray([[0.1, 0.2, 0.3], [0.1, knn_lib.BIG, knn_lib.BIG]])
+    lab = jnp.zeros((2, 3), jnp.int32)
+    inf_sp = jnp.full((2, 3), jnp.inf)
+    zero_dp = jnp.zeros((2, 3))
+    b = np.asarray(knn_lib._vote_bound(d, lab, inf_sp, zero_dp, k))
+    assert b[0] == 1.0
+    # Row 1: slot 0 unknown (inf), slot 1 padded -> both saturate.
+    assert b[1] == 1.0
+    # All-zero spread + dispersion on agreeing labels: certainty.
+    sp0 = jnp.zeros((2, 3))
+    b0 = np.asarray(knn_lib._vote_bound(d, lab, sp0, zero_dp, k))
+    assert b0[0] == 0.0
+
+
+def test_cf_with_bound_preserves_answers():
+    key = jax.random.PRNGKey(2)
+    r = jax.random.uniform(key, (N_CF, I_CF)) * 4 + 1
+    m = (jax.random.uniform(jax.random.fold_in(key, 1), (N_CF, I_CF)) < 0.3
+         ).astype(jnp.float32)
+    rm = r * m
+    cfg = lsh_lib.LSHConfig(n_hashes=4, bucket_width=4.0, n_buckets=16)
+    params = lsh_lib.init_lsh(jax.random.PRNGKey(8), I_CF, cfg)
+    agg = cf_lib.build_cf_aggregates(rm, m, params)
+    active, active_mask = rm[:4], m[:4]
+    for budget in (0, 24):
+        n0, d0 = cf_lib.accurateml_map(
+            rm, m, agg, active, active_mask, refine_budget=budget
+        )
+        n1, d1, var = cf_lib.accurateml_map(
+            rm, m, agg, active, active_mask, refine_budget=budget,
+            with_bound=True,
+        )
+        np.testing.assert_array_equal(np.asarray(n0), np.asarray(n1))
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+        v = np.asarray(var)
+        assert (v >= 0).all() and np.isfinite(v).all()
+
+
+def test_cf_assemble_without_sr2_saturates_but_stays_finite():
+    """Pre-second-moment CF snapshots assemble with finite-BIG variance:
+    the bound saturates (max uncertainty) without inf*0 NaN poisoning the
+    weighted variance matmul."""
+    key = jax.random.PRNGKey(2)
+    r = jax.random.uniform(key, (N_CF, I_CF)) * 4 + 1
+    m = (jax.random.uniform(jax.random.fold_in(key, 1), (N_CF, I_CF)) < 0.3
+         ).astype(jnp.float32)
+    rm = r * m
+    cfg = lsh_lib.LSHConfig(n_hashes=4, bucket_width=4.0, n_buckets=16)
+    params = lsh_lib.init_lsh(jax.random.PRNGKey(8), I_CF, cfg)
+    ids = lsh_lib.bucket_ids(rm, params)
+    stats = dict(cf_lib.cf_mergeable_stats(rm, m, ids, 16))
+    del stats["sr2"]
+    old = cf_lib.cf_assemble(stats, agg_lib.bucket_index(ids, 16))
+    assert np.isfinite(np.asarray(old.cvar)).all()
+    _, _, var = cf_lib.accurateml_map(
+        rm, m, old, rm[:2], m[:2], refine_budget=0, with_bound=True
+    )
+    v = np.asarray(var)
+    assert np.isfinite(v).all() and not np.isnan(v).any()
+    assert v.max() > 1e6  # saturated, not silently optimistic
+
+
+# ---------------------------------------------------------------------------
+# serving: the accuracy SLO end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def knn_server():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (N, D))
+    y = jax.random.randint(jax.random.fold_in(key, 1), (N,), 0, C)
+    servable = KNNServable(x, y, n_classes=C, k=K,
+                           lsh_key=jax.random.PRNGKey(7))
+    policy = BudgetPolicy(
+        compression_ratio=20.0, eps_max=0.32, degrade_floor=0.004
+    )
+    ctl = DeadlineController(policy, ema=0.0)
+    ctl.set_model(
+        "knn", CostModel(c_fixed=0.0, c_stage1=0.0, c_stage2=1.0 / N)
+    )
+    server = Server(
+        [servable],
+        controller=ctl,
+        batcher=ContinuousBatcher(max_batch=4, pad_sizes=(4,)),
+    )
+    return server, servable
+
+
+def test_responses_carry_error_bounds(knn_server):
+    server, servable = knn_server
+    for i in range(3):
+        server.submit("knn", (servable.train_x[i],), deadline_s=10.0)
+    responses = server.drain()
+    assert responses
+    for r in responses:
+        assert isinstance(r.error_bound, ErrorBound)
+        assert r.error_bound.metric == "label_divergence"
+        assert 0.0 <= r.error_bound.value <= 1.0
+        assert r.accuracy_met is None        # no max_error on the request
+        assert not r.refine_skipped
+    summary = server.summary()
+    assert summary["error_bound"]["n"] == len(responses)
+
+
+def test_generous_accuracy_slo_skips_refinement(knn_server):
+    """Bound already under max_error after stage 1 -> stage 2 skipped: the
+    anytime answer is stage-1 only and the skip is flagged on the response
+    and in the metrics (the contract's latency win)."""
+    server, servable = knn_server
+    rid = server.submit(
+        "knn", (servable.train_x[0],), deadline_s=10.0, max_error=2.0
+    )
+    (resp,) = [r for r in server.drain() if r.rid == rid]
+    assert resp.refine_skipped
+    assert resp.refined is None and resp.stage1 is not None
+    assert resp.accuracy_met is True
+    assert server.summary()["accuracy_slo"]["refine_skipped_batches"] == 1
+
+
+def test_unmet_accuracy_slo_boosts_past_default_grant(knn_server):
+    """Bound misses an unsatisfiable max_error -> with deadline slack the
+    controller boosts eps beyond policy.eps_max (latency knob yields to
+    the accuracy knob), and accuracy_met records the honest failure."""
+    server, servable = knn_server
+    eps_max = server.controller.policy.eps_max
+    rid = server.submit(
+        "knn", (servable.train_x[0],), deadline_s=10.0, max_error=-1.0
+    )
+    (resp,) = [r for r in server.drain() if r.rid == rid]
+    assert resp.eps_granted > eps_max
+    assert resp.refined is not None
+    assert resp.accuracy_met is False and not resp.refine_skipped
+    assert server.summary()["accuracy_slo"]["boosted_batches"] == 1
+
+
+def test_mixed_batch_does_not_skip(knn_server):
+    """Skipping is all-or-nothing per batch: one request without max_error
+    keeps refinement on for everyone (no silent accuracy downgrade)."""
+    server, servable = knn_server
+    r1 = server.submit(
+        "knn", (servable.train_x[0],), deadline_s=10.0, max_error=2.0
+    )
+    r2 = server.submit("knn", (servable.train_x[1],), deadline_s=10.0)
+    by_rid = {r.rid: r for r in server.drain()}
+    assert not by_rid[r1].refine_skipped and not by_rid[r2].refine_skipped
+    assert by_rid[r1].refined is not None
+    assert by_rid[r1].accuracy_met is True
+    assert by_rid[r2].accuracy_met is None

@@ -325,6 +325,19 @@ def test_percentile():
     assert math.isnan(percentile([], 50))
 
 
+def test_metrics_slo_class_boundaries():
+    """Class bounds are exclusive: a deadline exactly at a boundary lands
+    in the coarser class (satellite edge pin, deadline_s == 0.01)."""
+    from repro.serve.metrics import slo_class as metrics_slo_class
+
+    assert metrics_slo_class(0.0099) == "lt10ms"
+    assert metrics_slo_class(0.01) == "lt100ms"
+    assert metrics_slo_class(0.0999) == "lt100ms"
+    assert metrics_slo_class(0.1) == "lt1s"
+    assert metrics_slo_class(0.9999) == "lt1s"
+    assert metrics_slo_class(1.0) == "ge1s"
+
+
 # ---------------------------------------------------------------------------
 # engine metering (satellite regression)
 # ---------------------------------------------------------------------------

@@ -166,6 +166,56 @@ def test_coarsen_bit_identical_for_cf():
             )
 
 
+def test_second_moments_survive_merge_and_snapshot(knn_pair, tmp_path):
+    """The sumsq channel is additive like sums/counts: spread and
+    dispersion derived from a *merged* or *restored* level must equal the
+    cold build's bit-for-bit (the error-bound acceptance for the store)."""
+    cold = knn_pair()
+    warm = knn_pair()
+    warm.store.get(warm, warm.pyramid_spec.ratio(0))
+    for level in (1, warm.pyramid_spec.n_levels - 1):
+        ratio = warm.pyramid_spec.ratio(level)
+        built, _ = AggregateStore().get(cold, ratio)
+        merged, src = warm.store.get(warm, ratio)
+        assert src == SOURCE_MERGED
+        np.testing.assert_array_equal(np.asarray(built.spread),
+                                      np.asarray(merged.spread))
+        np.testing.assert_array_equal(np.asarray(built.dispersion),
+                                      np.asarray(merged.dispersion))
+    assert warm.store.save(tmp_path / "snap") == 1
+    dst = knn_pair()
+    assert dst.store.restore(tmp_path / "snap", [dst]) == 1
+    ratio0 = warm.pyramid_spec.ratio(0)
+    restored, source = dst.store.get(dst, ratio0)
+    assert source == SOURCE_RESTORED
+    built0, _ = AggregateStore().get(knn_pair(), ratio0)
+    np.testing.assert_array_equal(np.asarray(built0.spread),
+                                  np.asarray(restored.spread))
+    np.testing.assert_array_equal(np.asarray(built0.dispersion),
+                                  np.asarray(restored.dispersion))
+    # Populated buckets carry finite spread; only empties are +inf.
+    sp = np.asarray(restored.spread)
+    counts = np.asarray(restored.agg.counts)
+    assert np.isfinite(sp[counts > 0]).all()
+    assert np.isinf(sp[counts == 0]).all()
+
+
+def test_assemble_without_sumsq_degrades_to_infinite_spread():
+    """A pre-second-moment snapshot (no 'sumsq' channel) assembles with
+    +inf spread everywhere — maximum uncertainty, never a tight claim."""
+    from repro.apps.knn import knn_assemble, knn_mergeable_stats
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (N, D))
+    y = jax.random.randint(jax.random.fold_in(key, 1), (N,), 0, C)
+    cfg = lsh_lib.LSHConfig(n_hashes=4, bucket_width=4.0, n_buckets=32)
+    ids = lsh_lib.bucket_ids(x, lsh_lib.init_lsh(jax.random.PRNGKey(7), D, cfg))
+    stats = dict(knn_mergeable_stats(x, y, ids, 32, C))
+    del stats["sumsq"]
+    old = knn_assemble(stats, agg_lib.bucket_index(ids, 32))
+    assert np.isinf(np.asarray(old.spread)).all()
+
+
 def test_store_sources_and_memoization(knn_pair):
     s = knn_pair()
     _, src1 = s.store.get(s, 8.0)

@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""Lint: flag ``param or Ctor()`` defaulting of function parameters.
+"""Lint: flag ``param or Ctor()`` parameter defaulting and ``time.time()``.
 
 The bug class this kills shipped twice in this repo before CI caught on:
 
@@ -20,7 +20,15 @@ default (``x or 3`` on a param is flagged too when the param annotation
 suggests Optional — kept simple: only Call defaults are flagged, the
 shipped bug shape).
 
-Suppress a deliberate use with ``# lint: allow-falsy-default`` on the line.
+A second check flags ``time.time()`` calls: library code here times
+*deltas* (latencies, compile times, budgets), and wall-clock time is not
+monotonic — an NTP step mid-measurement corrupts the delta (the
+``launch/dryrun.py`` compile-timing bug).  Use ``time.perf_counter()``
+(or the injectable ``clock=`` the serving/obs layers thread through).
+
+Suppress a deliberate use with ``# lint: allow-falsy-default`` (or, for a
+genuine wall-clock need such as timestamps, ``# lint: allow-wall-clock``)
+on the line.
 
 Usage: ``python tools/lint_falsy_defaults.py [paths...]`` (default:
 ``src`` ``tools`` ``benchmarks`` ``examples``).  Exit 1 when findings.
@@ -32,6 +40,7 @@ import sys
 from pathlib import Path
 
 SUPPRESS = "lint: allow-falsy-default"
+SUPPRESS_WALL_CLOCK = "lint: allow-wall-clock"
 DEFAULT_PATHS = ("src", "tools", "benchmarks", "examples")
 
 
@@ -86,6 +95,29 @@ class _Finder(ast.NodeVisitor):
                             f"`{left.id} if {left.id} is not None else ...`",
                         )
                     )
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        # `time.time()` — wall clock where a monotonic delta is meant.
+        f = node.func
+        if (
+            isinstance(f, ast.Attribute)
+            and f.attr == "time"
+            and isinstance(f.value, ast.Name)
+            and f.value.id == "time"
+        ):
+            line = ""
+            if 0 < node.lineno <= len(self.source_lines):
+                line = self.source_lines[node.lineno - 1]
+            if SUPPRESS_WALL_CLOCK not in line:
+                self.findings.append(
+                    (
+                        node.lineno,
+                        "`time.time()` is wall-clock (not monotonic); use "
+                        "`time.perf_counter()` for deltas, or suppress a "
+                        f"timestamp use with `# {SUPPRESS_WALL_CLOCK}`",
+                    )
+                )
         self.generic_visit(node)
 
 
