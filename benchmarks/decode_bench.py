@@ -1,0 +1,172 @@
+"""Decode-engine benchmark: tokens/s and fidelity across refine_frac.
+
+Drives ``repro.serve.lm.DecodeEngine`` (bucket-major aggregated KV) at a
+sweep of per-step refine fractions — the decode-side eps — and reports,
+per level:
+
+  * decode throughput in tokens/s (all slots, steady state),
+  * per-token step latency p50/p99 (ms),
+  * stage-1-vs-exact fidelity: mean KL(exact || approx) of the emitted
+    next-token distributions and greedy-token agreement vs refine_frac=1.
+
+Internal guard (the acceptance bar for the aggregated decode path): at
+``refine_frac=1.0`` every bucket is exactly re-attended, so the engine's
+tokens must MATCH an exact-attention (non-aggregated) decode of the same
+model, and the logits must agree to float tolerance.  A mismatch prints a
+``BENCH_FAIL`` line, which fails the driver without aborting the sweep.
+
+    PYTHONPATH=src python -m benchmarks.decode_bench
+    REPRO_BENCH_TINY=1 ...   # CI smoke sizes
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.models import init_caches, init_params, serve_step
+from repro.serve.lm import DecodeEngine
+
+TINY = bool(os.environ.get("REPRO_BENCH_TINY"))
+MAX_SLOTS = 2 if TINY else 4
+S_MAX = 16 if TINY else 64
+PROMPT_LEN = 5 if TINY else 16
+NEW_TOKENS = 3 if TINY else 24
+COMPRESSION = 4
+# Sweep keys name the refined percentage (p0 = pure stage-1 centroids).
+SWEEP = ((0.0, "p0"), (0.05, "p5"), (0.25, "p25"), (1.0, "p100"))
+
+
+def _build():
+    cfg = get_config("qwen3-8b", smoke=True).with_(
+        agg_kv=True, agg_layout="bucket_major", agg_compression=COMPRESSION
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = DecodeEngine(
+        params, cfg, max_slots=MAX_SLOTS, s_max=S_MAX,
+        key=jax.random.PRNGKey(7),
+    )
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(
+        0, cfg.vocab_size, size=(MAX_SLOTS, PROMPT_LEN)
+    ).astype(np.int32)
+    return cfg, params, engine, prompts
+
+
+def _exact_decode(cfg, params, prompt: np.ndarray, n_new: int):
+    """Straight-line exact-attention decode: greedy tokens + logits."""
+    exact_cfg = cfg.with_(agg_kv=False)
+    caches = init_caches(
+        jax.random.PRNGKey(7), exact_cfg, batch=1, s_max=S_MAX
+    )
+    pos = np.zeros((1,), np.int32)
+    feed = list(prompt)
+    toks, logits = [], []
+    tok = None
+    for t in range(len(prompt) + n_new - 1):
+        cur = np.asarray([[feed[t] if t < len(feed) else tok]], np.int32)
+        lg, caches = serve_step(params, caches, cur, pos, exact_cfg)
+        pos = pos + 1
+        tok = int(np.argmax(np.asarray(lg[0])))
+        if t >= len(prompt) - 1:
+            toks.append(tok)
+            logits.append(np.asarray(lg[0], np.float32))
+    return np.asarray(toks, np.int32), np.stack(logits)
+
+
+def _generate(engine, prompts, rf: float):
+    """Prefill all slots then decode NEW_TOKENS-1 steps at ``rf``.
+
+    Returns (tokens [slots, T], logits [slots, T, V], step wall times).
+    """
+    engine.free_all()
+    tok_cols, logit_cols = [], []
+    first_t, first_l = [], []
+    for i in range(prompts.shape[0]):
+        pf = engine.prefill(prompts[i])
+        engine.insert(pf, i)
+        first_t.append(pf.next_token)
+        first_l.append(pf.logits)
+    tok_cols.append(np.asarray(first_t, np.int32))
+    logit_cols.append(np.stack(first_l))
+    times = []
+    for _ in range(NEW_TOKENS - 1):
+        t0 = time.perf_counter()
+        nxt, lg = engine.generate_step(rf)   # blocks (numpy out)
+        times.append(time.perf_counter() - t0)
+        tok_cols.append(np.asarray(nxt))
+        logit_cols.append(np.asarray(lg))
+    return (
+        np.stack(tok_cols, axis=1), np.stack(logit_cols, axis=1), times
+    )
+
+
+def _kl(p_logits: np.ndarray, q_logits: np.ndarray) -> float:
+    """Mean KL(softmax(p) || softmax(q)) over all emitted positions."""
+    p = p_logits - p_logits.max(-1, keepdims=True)
+    q = q_logits - q_logits.max(-1, keepdims=True)
+    lp = p - np.log(np.exp(p).sum(-1, keepdims=True))
+    lq = q - np.log(np.exp(q).sum(-1, keepdims=True))
+    return float(np.mean(np.sum(np.exp(lp) * (lp - lq), axis=-1)))
+
+
+def run():
+    cfg, params, engine, prompts = _build()
+    # warm every sweep rf (compile cost is deploy cost, not tokens/s)
+    for rf, _ in SWEEP:
+        _generate(engine, prompts, rf)
+
+    ref_tokens, ref_logits, _ = _generate(engine, prompts, 1.0)
+
+    # ---- guard: rf=1.0 aggregated decode == exact attention decode ----
+    guard_ok = True
+    for i in range(prompts.shape[0]):
+        ex_toks, ex_logits = _exact_decode(cfg, params, prompts[i], NEW_TOKENS)
+        if not np.array_equal(ref_tokens[i], ex_toks) or not np.allclose(
+            ref_logits[i], ex_logits, rtol=1e-4, atol=1e-4
+        ):
+            guard_ok = False
+            print(
+                "BENCH_FAIL,decode_bench,"
+                f"rf=1.0 slot {i} diverged from exact attention"
+            )
+
+    levels = {}
+    for rf, key in SWEEP:
+        toks, logits, times = _generate(engine, prompts, rf)
+        per_tok = np.asarray(times) / MAX_SLOTS
+        tokens_per_s = (NEW_TOKENS - 1) * MAX_SLOTS / sum(times)
+        levels[key] = {
+            "refine_frac": rf,
+            "tokens_per_s": tokens_per_s,
+            "step_p50_ms": float(np.quantile(per_tok, 0.5) * 1e3),
+            "step_p99_ms": float(np.quantile(per_tok, 0.99) * 1e3),
+            "kl_vs_exact": _kl(ref_logits, logits),
+            "token_agreement": float(np.mean(toks == ref_tokens)),
+            "step_bytes": engine.step_bytes(rf),
+        }
+
+    summary = {
+        "slots": MAX_SLOTS, "s_max": S_MAX, "prompt_len": PROMPT_LEN,
+        "new_tokens": NEW_TOKENS, "n_buckets": engine.n_buckets,
+        "exact_match_at_full_refine": 1.0 if guard_ok else 0.0,
+        "levels": levels,
+    }
+    print("BENCH " + json.dumps({"decode_bench": summary}))
+    for key, lv in levels.items():
+        emit(
+            f"decode_{key}", lv["step_p50_ms"] * 1e3,
+            f"tokens_per_s={lv['tokens_per_s']:.1f};"
+            f"kl={lv['kl_vs_exact']:.4f};"
+            f"agree={lv['token_agreement']:.2f}",
+        )
+    return summary
+
+
+if __name__ == "__main__":
+    run()

@@ -94,15 +94,15 @@ def main(argv: list[str] | None = None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (
-        chaos_soak, error_bounds, fig4_breakdown, fig5_shuffle,
+        chaos_soak, decode_bench, error_bounds, fig4_breakdown, fig5_shuffle,
         fig6_time_reduction, fig7_accuracy, fig8_vs_sampling, fig9_k_sweep,
         kernel_bench, roofline, serve_latency, store_reuse,
     )
 
     modules = [fig4_breakdown, fig5_shuffle, fig6_time_reduction,
                fig7_accuracy, fig8_vs_sampling, fig9_k_sweep,
-               kernel_bench, serve_latency, store_reuse, chaos_soak,
-               error_bounds, roofline]
+               kernel_bench, serve_latency, decode_bench, store_reuse,
+               chaos_soak, error_bounds, roofline]
     if args.suites:
         wanted = {s.strip() for s in args.suites.split(",") if s.strip()}
         names = {m.__name__.rsplit(".", 1)[-1] for m in modules}

@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: stage-2 exact re-attention over selected KV buckets.
+
+The decode-side analogue of ``refine_distances``: stage 1 picks the
+top-correlation buckets of the aggregated KV cache, stage 2 re-attends
+exactly over those buckets' raw rows.  The per-sequence bucket selection
+(``top_idx``) is a *scalar-prefetch* operand (``PrefetchScalarGridSpec``):
+the BlockSpec index map reads ``top_idx[b, r]`` and DMAs that single
+bucket's [C, Hkv, dk] slot rows straight from HBM into VMEM, so the
+[B, R, C, ...] gathered tensor of the reference oracle never exists.
+
+Grid is (B, R) with the selection axis minor; a per-sequence partial
+softmax (running max / normalizer / weighted value sum) accumulates in
+VMEM scratch across the R steps, and the last step writes the triple.
+Masked or empty selections contribute the finite NEG sentinel — weight
+zero, never a NaN (see ``ref.NEG``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import NEG
+
+
+def _kernel(idx_ref, use_ref, cnt_ref, q_ref, k_ref, v_ref,
+            out_m, out_l, out_acc, m_s, l_s, acc_s,
+            *, hkv, group, cap, dk, dv, scale):
+    bi = pl.program_id(0)
+    ri = pl.program_id(1)
+
+    @pl.when(ri == 0)
+    def _():
+        m_s[...] = jnp.full_like(m_s[...], NEG)
+        l_s[...] = jnp.zeros_like(l_s[...])
+        acc_s[...] = jnp.zeros_like(acc_s[...])
+
+    q = q_ref[0].astype(jnp.float32).reshape(hkv, group, dk)
+    k = k_ref[0, 0].astype(jnp.float32).reshape(cap, hkv, dk)
+    v = v_ref[0, 0].astype(jnp.float32).reshape(cap, hkv, dv)
+
+    cnt = cnt_ref[bi, idx_ref[bi, ri]]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (1, cap), 1)
+    live = (
+        (rows < jnp.minimum(cnt, cap)) & (cnt > 0) & (use_ref[bi, ri] != 0)
+    )                                                       # [1, cap]
+
+    logits = jnp.einsum("kgd,ckd->kgc", q, k) * scale       # [Hkv,G,C]
+    logits = jnp.where(live[:, None, :], logits, NEG)
+    bm = jnp.max(logits, axis=-1)                           # [Hkv,G]
+    bw = jnp.where(logits > NEG / 2,
+                   jnp.exp(logits - bm[..., None]), 0.0)
+    bl = jnp.sum(bw, axis=-1)                               # [Hkv,G]
+    bacc = jnp.einsum("kgc,ckd->kgd", bw, v)                # [Hkv,G,dv]
+
+    m_old = m_s[...]
+    m_new = jnp.maximum(m_old, bm)
+    w_old = jnp.exp(m_old - m_new)
+    w_b = jnp.exp(bm - m_new)
+    m_s[...] = m_new
+    l_s[...] = l_s[...] * w_old + bl * w_b
+    acc_s[...] = acc_s[...] * w_old[..., None] + bacc * w_b[..., None]
+
+    @pl.when(ri == pl.num_programs(1) - 1)
+    def _():
+        out_m[0] = m_s[...]
+        out_l[0] = l_s[...]
+        out_acc[0] = acc_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def agg_refine_attention_pallas(
+    q: jax.Array,          # [B, Hkv, G, dk]
+    k_slots: jax.Array,    # [B, K, C, Hkv, dk]
+    v_slots: jax.Array,    # [B, K, C, Hkv, dv]
+    counts: jax.Array,     # [B, K] int32
+    top_idx: jax.Array,    # [B, R] int32
+    use: jax.Array,        # [B, R] — 0 masks a selection slot
+    *, scale: float, interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Partial-softmax triple over selected buckets; see ``ref.agg_refine_attention``."""
+    b, hkv, group, dk = q.shape
+    _, kb, cap, _, dv = v_slots.shape
+    r = top_idx.shape[1]
+    if r == 0:
+        raise ValueError("empty selection: caller must skip R == 0")
+
+    qf = q.reshape(b, hkv * group, dk)
+    kf = k_slots.reshape(b, kb, cap * hkv * dk)
+    vf = v_slots.reshape(b, kb, cap * hkv * dv)
+    idx32 = jnp.clip(top_idx.astype(jnp.int32), 0, kb - 1)
+    use32 = use.astype(jnp.int32)
+    cnt32 = counts.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, r),
+        in_specs=[
+            pl.BlockSpec(
+                (1, hkv * group, dk),
+                lambda bi, ri, idx_ref, use_ref, cnt_ref: (bi, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, cap * hkv * dk),
+                lambda bi, ri, idx_ref, use_ref, cnt_ref: (
+                    bi, idx_ref[bi, ri], 0
+                ),
+            ),
+            pl.BlockSpec(
+                (1, 1, cap * hkv * dv),
+                lambda bi, ri, idx_ref, use_ref, cnt_ref: (
+                    bi, idx_ref[bi, ri], 0
+                ),
+            ),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, hkv, group), lambda bi, ri, *_: (bi, 0, 0)),
+            pl.BlockSpec((1, hkv, group), lambda bi, ri, *_: (bi, 0, 0)),
+            pl.BlockSpec(
+                (1, hkv, group, dv), lambda bi, ri, *_: (bi, 0, 0, 0)
+            ),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, group), jnp.float32),
+            pltpu.VMEM((hkv, group), jnp.float32),
+            pltpu.VMEM((hkv, group, dv), jnp.float32),
+        ],
+    )
+    out_m, out_l, out_acc = pl.pallas_call(
+        functools.partial(
+            _kernel, hkv=hkv, group=group, cap=cap, dk=dk, dv=dv,
+            scale=scale,
+        ),
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, hkv, group), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, group), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, group, dv), jnp.float32),
+        ),
+        interpret=interpret,
+    )(idx32, use32, cnt32, qf, kf, vf)
+    return out_m, out_l, out_acc

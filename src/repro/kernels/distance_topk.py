@@ -24,7 +24,7 @@ from repro.kernels.topk_stream import BIG, merge_kbest, pad_to_multiple
 
 
 def _kernel(q_ref, p_ref, l_ref, v_ref, out_d_ref, out_l_ref,
-            best_d, best_l, *, k):
+            best_d, best_l, *, k, metric):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -38,9 +38,14 @@ def _kernel(q_ref, p_ref, l_ref, v_ref, out_d_ref, out_l_ref,
         q, p, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )                                               # [TQ, TN]
-    q2 = jnp.sum(q * q, axis=1, keepdims=True)      # [TQ, 1]
-    p2 = jnp.sum(p * p, axis=1, keepdims=True).T    # [1, TN]
-    d = jnp.maximum(q2 - 2.0 * cross + p2, 0.0)
+    if metric == "dot":
+        # Negated correlation: the k *smallest* scores are the k most
+        # correlated points (zero feature padding is dot-neutral).
+        d = -cross
+    else:
+        q2 = jnp.sum(q * q, axis=1, keepdims=True)  # [TQ, 1]
+        p2 = jnp.sum(p * p, axis=1, keepdims=True).T  # [1, TN]
+        d = jnp.maximum(q2 - 2.0 * cross + p2, 0.0)
     d = jnp.where(v_ref[...] != 0, d, BIG)          # [1,TN] mask broadcast
 
     lab = jnp.broadcast_to(l_ref[...], d.shape)     # [TQ, TN]
@@ -55,14 +60,17 @@ def _kernel(q_ref, p_ref, l_ref, v_ref, out_d_ref, out_l_ref,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "tq", "tn", "interpret")
+    jax.jit, static_argnames=("k", "tq", "tn", "metric", "interpret")
 )
 def distance_topk_pallas(
     queries: jax.Array, points: jax.Array, labels: jax.Array,
     valid: jax.Array | None = None,
-    *, k: int, tq: int = 128, tn: int = 512, interpret: bool = False,
+    *, k: int, tq: int = 128, tn: int = 512, metric: str = "l2",
+    interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """[Q,D] x [N,D] (+[N] labels) -> ([Q,k], [Q,k]) nearest (dist, label)."""
+    if metric not in ("l2", "dot"):
+        raise ValueError(f"metric {metric!r}")
     q0 = queries.shape[0]
     q = pad_to_multiple(pad_to_multiple(queries, 128, 1), tq, 0)
     p = pad_to_multiple(pad_to_multiple(points, 128, 1), tn, 0)
@@ -74,7 +82,7 @@ def distance_topk_pallas(
     nn = p.shape[0]
 
     out_d, out_l = pl.pallas_call(
-        functools.partial(_kernel, k=k),
+        functools.partial(_kernel, k=k, metric=metric),
         grid=(qq // tq, nn // tn),
         in_specs=[
             pl.BlockSpec((tq, d), lambda i, j: (i, 0)),

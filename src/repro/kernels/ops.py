@@ -170,27 +170,32 @@ def aggregated_attention_decode(
 # ---------------------------------------------------------------------------
 
 @_probed("distance_topk")
-@functools.partial(jax.jit, static_argnames=("k", "force"))
+@functools.partial(jax.jit, static_argnames=("k", "metric", "force"))
 def distance_topk(
     queries: jax.Array, points: jax.Array, labels: jax.Array,
     valid: jax.Array | None = None,
-    *, k: int, force: str | None = None,
+    *, k: int, metric: str = "l2", force: str | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Fused squared-L2 + streaming top-k: -> ([Q,k] dists, [Q,k] labels).
+    """Fused score + streaming top-k: -> ([Q,k] scores, [Q,k] labels).
 
-    The [Q,N] distance matrix never reaches HBM on the kernel path; the
-    running k-best lives in VMEM scratch across point tiles.
+    ``metric="l2"`` scores squared-L2 distance; ``metric="dot"`` scores
+    *negated* dot-product correlation (decode-side stage-1 bucket
+    selection), so the k smallest scores are the k most correlated.  The
+    [Q,N] score matrix never reaches HBM on the kernel path; the running
+    k-best lives in VMEM scratch across point tiles.
     """
     force = _resolve(force)
     if force == "ref":
-        return ref.distance_topk(queries, points, labels, valid, k=k)
+        return ref.distance_topk(queries, points, labels, valid,
+                                 k=k, metric=metric)
     if force == "pallas_interpret" or _on_tpu():
         from repro.kernels import distance_topk as dk
         return dk.distance_topk_pallas(
-            queries, points, labels, valid, k=k,
+            queries, points, labels, valid, k=k, metric=metric,
             interpret=force == "pallas_interpret",
         )
-    return ref.distance_topk(queries, points, labels, valid, k=k)
+    return ref.distance_topk(queries, points, labels, valid,
+                             k=k, metric=metric)
 
 
 @_probed("candidate_topk")
@@ -216,6 +221,33 @@ def candidate_topk(
             interpret=force == "pallas_interpret",
         )
     return ref.candidate_topk(dists, labels, init_d, init_l, k=k)
+
+
+@_probed("agg_refine_attention")
+@functools.partial(jax.jit, static_argnames=("scale", "force"))
+def agg_refine_attention(
+    q: jax.Array, k_slots: jax.Array, v_slots: jax.Array,
+    counts: jax.Array, top_idx: jax.Array, use: jax.Array,
+    *, scale: float, force: str | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Stage-2 exact re-attention over selected KV buckets: the partial
+    softmax triple (m, l, acc), merged with the centroid pass via
+    ``ref.merge_partials``.  Scalar-prefetch row walk on the kernel path —
+    the gathered [B,R,C,...] slot tensor never exists."""
+    force = _resolve(force)
+    if force == "ref":
+        return ref.agg_refine_attention(
+            q, k_slots, v_slots, counts, top_idx, use, scale
+        )
+    if force == "pallas_interpret" or _on_tpu():
+        from repro.kernels import agg_refine as ar
+        return ar.agg_refine_attention_pallas(
+            q, k_slots, v_slots, counts, top_idx, use, scale=scale,
+            interpret=force == "pallas_interpret",
+        )
+    return ref.agg_refine_attention(
+        q, k_slots, v_slots, counts, top_idx, use, scale
+    )
 
 
 @_probed("refine_distances")

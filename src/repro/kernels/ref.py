@@ -61,15 +61,28 @@ def candidate_topk(
 
 def distance_topk(
     queries: jax.Array, points: jax.Array, labels: jax.Array,
-    valid: jax.Array | None = None, *, k: int,
+    valid: jax.Array | None = None, *, k: int, metric: str = "l2",
 ) -> tuple[jax.Array, jax.Array]:
     """Fused distance + top-k oracle: [Q,D],[N,D],[N] -> ([Q,k], [Q,k]).
 
     Semantically `knn_distance` then `top_k`; the Pallas kernel never
     materializes the [Q, N] intermediate.  ``valid`` masks points (padding,
     empty buckets) out with the BIG sentinel.
+
+    ``metric="dot"`` scores by *negated* dot product, so the k smallest
+    scores are the k most-correlated points — the decode path's stage-1
+    bucket selection (Definition 4's correlations) rides the same fused
+    kernel as kNN.  A selected score >= BIG/2 is a padding slot, not a
+    real candidate.
     """
-    d = knn_distance(queries, points)
+    if metric == "dot":
+        q = queries.astype(jnp.float32)
+        p = points.astype(jnp.float32)
+        d = -(q @ p.T)
+    elif metric == "l2":
+        d = knn_distance(queries, points)
+    else:
+        raise ValueError(f"metric {metric!r}: expected 'l2' or 'dot'")
     if valid is not None:
         d = jnp.where(valid[None, :], d, BIG)
     lab = jnp.broadcast_to(labels[None, :].astype(jnp.int32), d.shape)
@@ -222,7 +235,11 @@ def aggregated_attention_decode(
         logits_cent = logits_cent + log_mult  # weight centroid by count
 
         all_logits = jnp.concatenate([logits_tok, logits_cent])
-        m = jnp.max(all_logits)
+        # Clamp the running max to the finite NEG sentinel: with every
+        # bucket empty (all logits -inf) the subtraction below would be
+        # inf - inf = NaN before the isfinite mask discards it; clamped,
+        # the all-empty cache yields exact zeros with no NaN transient.
+        m = jnp.maximum(jnp.max(all_logits), NEG)
         w = jnp.exp(all_logits - m)
         w = jnp.where(jnp.isfinite(all_logits), w, 0.0)
         denom = jnp.maximum(jnp.sum(w), 1e-30)
@@ -235,6 +252,77 @@ def aggregated_attention_decode(
         )
         out.append((w @ vals) / denom)
     return jnp.stack(out)
+
+
+# Finite "minus infinity" for masked logits: exp(NEG - m) underflows to 0
+# for any finite m, so merged-softmax arithmetic never produces a NaN from
+# an inf - inf subtraction (the PR 9 "+inf spread, never 0/NaN" convention
+# applied to attention logits).
+NEG = -1.0e30
+
+
+def agg_refine_attention(
+    q: jax.Array,          # [B, Hkv, G, dk]
+    k_slots: jax.Array,    # [B, K, C, Hkv, dk]
+    v_slots: jax.Array,    # [B, K, C, Hkv, dv]
+    counts: jax.Array,     # [B, K] int32 (total inserts incl. overflow)
+    top_idx: jax.Array,    # [B, R] int32 — selected (refined) buckets
+    use: jax.Array,        # [B, R] — 0 masks a selection slot (padding)
+    scale: float,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Stage-2 exact re-attention over the selected buckets' live slots.
+
+    Returns the partial-softmax triple ``(m [B,Hkv,G], l [B,Hkv,G],
+    acc [B,Hkv,G,dv])`` — running max, normalizer, and weighted value sum —
+    so the caller merges it with the centroid pass via ``merge_partials``.
+    The oracle gathers the [B,R,C,...] slot tensor; the Pallas kernel walks
+    each selected bucket's rows straight from HBM (scalar-prefetch index
+    map), mirroring ``refine_distances``.
+
+    A selected-but-empty or masked bucket contributes ``m=NEG, l=0,
+    acc=0`` — never a NaN, never attention weight.
+    """
+    b, hkv, g, dk = q.shape
+    cap = k_slots.shape[2]
+    dv = v_slots.shape[-1]
+    idx = top_idx[:, :, None, None, None]
+    k_sel = jnp.take_along_axis(
+        k_slots, jnp.broadcast_to(
+            idx, (b, top_idx.shape[1], cap, hkv, dk)
+        ), axis=1,
+    ).astype(jnp.float32)                                   # [B,R,C,Hkv,dk]
+    v_sel = jnp.take_along_axis(
+        v_slots, jnp.broadcast_to(
+            idx, (b, top_idx.shape[1], cap, hkv, dv)
+        ), axis=1,
+    ).astype(jnp.float32)                                   # [B,R,C,Hkv,dv]
+    cnt_sel = jnp.take_along_axis(counts, top_idx, axis=1)  # [B,R]
+    live = (
+        jnp.arange(cap)[None, None, :] < jnp.minimum(cnt_sel, cap)[:, :, None]
+    ) & (cnt_sel > 0)[:, :, None] & (use != 0)[:, :, None]  # [B,R,C]
+
+    qf = q.astype(jnp.float32)
+    logits = jnp.einsum("bkgd,brckd->bkgrc", qf, k_sel) * scale
+    logits = jnp.where(live[:, None, None], logits, NEG)
+    flat = logits.reshape(b, hkv, g, -1)                    # [B,Hkv,G,R*C]
+    m = jnp.max(flat, axis=-1)
+    w = jnp.where(flat > NEG / 2, jnp.exp(flat - m[..., None]), 0.0)
+    l = jnp.sum(w, axis=-1)
+    vals = v_sel.transpose(0, 3, 1, 2, 4).reshape(b, hkv, -1, dv)
+    acc = jnp.einsum("bkgt,bktd->bkgd", w, vals)
+    return m, l, acc
+
+
+def merge_partials(
+    m1: jax.Array, l1: jax.Array, a1: jax.Array,
+    m2: jax.Array, l2: jax.Array, a2: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Online-softmax merge of two partial triples (finite NEG sentinel:
+    both-empty inputs merge to (NEG, 0, 0) with no NaN)."""
+    m = jnp.maximum(m1, m2)
+    w1 = jnp.exp(m1 - m)
+    w2 = jnp.exp(m2 - m)
+    return m, l1 * w1 + l2 * w2, a1 * w1[..., None] + a2 * w2[..., None]
 
 
 def segment_mean(

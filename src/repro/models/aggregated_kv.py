@@ -24,8 +24,55 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+from repro.kernels.ref import NEG
+from repro.kernels.topk_stream import BIG
 
 Params = dict[str, Any]
+
+
+def refine_count(refine_frac: float, n_buckets: int) -> int:
+    """Buckets to re-attend exactly: ceil(refine_frac * K), clamped to
+    [0, K].  ``refine_frac=0`` is a real operating point (pure stage-1
+    centroid attention — the decode-side refine_budget=0 answer); the
+    inner ``round`` guards float rounding when the caller derives
+    refine_frac as budget / K."""
+    return max(0, min(n_buckets, int(math.ceil(round(
+        refine_frac * n_buckets, 9)))))
+
+
+def select_buckets(
+    qg: jax.Array,       # [B, Hkv, G, dk]
+    mean_k: jax.Array,   # [B, K, Hkv, dk]
+    counts: jax.Array,   # [B, K] int32
+    *, n_refine: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Stage-1 bucket selection: top-correlation buckets via the fused
+    ``distance_topk`` kernel in dot-product mode (Definition 4's
+    correlations as the selection score).
+
+    The pooled query sums over the group heads, so the score is the total
+    centroid logit mass  sum_{hkv,g} q · mean_k  — one [1, Hkv*dk] x
+    [K, Hkv*dk] pass through the streaming top-k instead of a
+    materialized [K] logit sort.  Returns ``(top_idx [B,R], use [B,R])``;
+    ``use`` is False for padding slots (fewer than R non-empty buckets),
+    whose index must not be trusted.
+    """
+    b, hkv, _, dk = qg.shape
+    kb = mean_k.shape[1]
+    q_pool = jnp.sum(qg.astype(jnp.float32), axis=2).reshape(b, hkv * dk)
+    cents = mean_k.astype(jnp.float32).reshape(b, kb, hkv * dk)
+    labels = jnp.arange(kb, dtype=jnp.int32)
+
+    def per_seq(qp, cb, cnt):
+        d, lab = kernel_ops.distance_topk(
+            qp[None], cb, labels, (cnt > 0).astype(jnp.int32),
+            k=n_refine, metric="dot",
+        )
+        return lab[0], d[0]
+
+    top_idx, score = jax.vmap(per_seq)(q_pool, cents, counts)
+    return top_idx.astype(jnp.int32), score < BIG / 2
 
 
 @jax.tree_util.register_pytree_node_class
@@ -181,33 +228,37 @@ def decode_attend(
     """Two-stage aggregated attention for one decode step.
 
     q: [B, H, dk]; pos: [B] current positions (valid_len = pos + 1).
-    Returns [B, H, dv] (float32).
+    Returns [B, H, dv] (float32).  ``refine_frac=0`` is pure stage-1:
+    every bucket contributes its count-weighted centroid, nothing is
+    re-attended exactly.
     """
-    n_refine = max(1, int(math.ceil(refine_frac * cache.n_buckets)))
+    n_refine = refine_count(refine_frac, cache.n_buckets)
+    b, hq, dk = q.shape
+    hkv = cache.mean_k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, dk)
 
-    def per_seq(q_b, k_b, v_b, bucket_b, mk_b, mv_b, cnt_b, pos_b):
-        # stage 1: correlations = max-over-heads centroid logit (Def. 4)
-        hq, dk = q_b.shape
-        hkv = mk_b.shape[1]
-        group = hq // hkv
-        qg = q_b.reshape(hkv, group, dk).astype(jnp.float32)
-        cent_logits = jnp.einsum(
-            "kgd,Kkd->kgK", qg, mk_b.astype(jnp.float32)
-        ) * scale
-        corr = jnp.max(cent_logits.reshape(hkv * group, -1), axis=0)  # [K]
-        corr = jnp.where(cnt_b > 0, corr, -jnp.inf)
-        # stage 2 selection: top-correlated buckets re-attended exactly
-        _, top_idx = jax.lax.top_k(corr, n_refine)
-        refined = jnp.zeros((cache.n_buckets,), bool).at[top_idx].set(True)
-        refined = refined & (cnt_b > 0)
+    if n_refine > 0:
+        top_idx, use = select_buckets(
+            qg, cache.mean_k, cache.counts, n_refine=n_refine
+        )
+        # Duplicate padding indices scatter with .max (logical or), so an
+        # unused slot can never un-refine a bucket another slot selected.
+        refined = jnp.zeros((b, cache.n_buckets), bool)
+        refined = refined.at[jnp.arange(b)[:, None], top_idx].max(use)
+        refined = refined & (cache.counts > 0)
+    else:
+        refined = jnp.zeros((b, cache.n_buckets), bool)
+
+    def per_seq(q_b, k_b, v_b, bucket_b, mk_b, mv_b, cnt_b, ref_b, pos_b):
         return kernel_ops.aggregated_attention_decode(
-            q_b, k_b, v_b, bucket_b, mk_b, mv_b, cnt_b, refined,
+            q_b, k_b, v_b, bucket_b, mk_b, mv_b, cnt_b, ref_b,
             scale=scale, valid_len=pos_b + 1,
         )
 
     return jax.vmap(per_seq)(
         q, cache.k, cache.v, cache.bucket_of, cache.mean_k, cache.mean_v,
-        cache.counts, pos,
+        cache.counts, refined, pos,
     )
 
 
@@ -344,76 +395,93 @@ def decode_attend_bucket_major(
     """Two-stage attention reading only centroids + refined buckets.
 
     q: [B, H, dk] -> [B, H, dv] float32.  Bytes/step: O(K + eps*S).
+
+    Batched partial-softmax composition: the stage-2 slot walk routes
+    through ``kernel_ops.agg_refine_attention`` (scalar-prefetch row walk
+    on the kernel path — the [B,R,C,...] gather never exists), overflow
+    centroids and unrefined count-weighted centroids each form their own
+    partial triple, and the triples merge via ``ref.merge_partials``.
+    All masking uses the finite NEG sentinel: empty buckets, padded
+    selection slots, and the all-empty cache yield weight 0, never NaN.
+    ``refine_frac=0`` is pure stage-1 (centroids only).
     """
-    n_refine = max(1, int(math.ceil(refine_frac * cache.n_buckets)))
+    n_refine = refine_count(refine_frac, cache.n_buckets)
     cap = cache.capacity
+    b, hq, dk = q.shape
+    hkv = cache.mean_k.shape[2]
+    group = hq // hkv
+    kb = cache.n_buckets
+    qg = q.reshape(b, hkv, group, dk).astype(jnp.float32)
+    cnt = cache.counts
+    dv = cache.v.shape[-1]
 
-    def per_seq(q_b, k_b, v_b, mk_b, mv_b, ok_b, ov_b, cnt_b):
-        hq, dk = q_b.shape
-        hkv = mk_b.shape[1]
-        group = hq // hkv
-        qg = q_b.reshape(hkv, group, dk).astype(jnp.float32)
-        # stage 1: centroid logits = correlations (Def. 4)
-        cent_logits = jnp.einsum(
-            "kgd,Kkd->kgK", qg, mk_b.astype(jnp.float32)
-        ) * scale                                          # [hkv,g,K]
-        corr = jnp.max(cent_logits.reshape(-1, cent_logits.shape[-1]), 0)
-        corr = jnp.where(cnt_b > 0, corr, -jnp.inf)
-        _, top = jax.lax.top_k(corr, n_refine)             # [R]
-
-        # stage 2: gather ONLY the refined buckets' slots
-        k_sel = k_b[top]                                   # [R,C,hkv,dk]
-        v_sel = v_b[top]                                   # [R,C,hkv,dv]
-        cnt_sel = cnt_b[top]                               # [R]
-        slot_live = (
-            jnp.arange(cap)[None, :] < jnp.minimum(cnt_sel, cap)[:, None]
-        ) & (cnt_sel > 0)[:, None]                         # [R,C]
-        tok_logits = jnp.einsum(
-            "kgd,RCkd->kgRC", qg, k_sel.astype(jnp.float32)
-        ) * scale
-        tok_logits = jnp.where(
-            slot_live[None, None], tok_logits, -jnp.inf
+    if n_refine > 0:
+        top_idx, use = select_buckets(
+            qg, cache.mean_k, cnt, n_refine=n_refine
         )
-
-        # refined buckets' overflow centroids (tokens beyond capacity)
-        over_cnt = jnp.maximum(cnt_sel - cap, 0).astype(jnp.float32)
+        # exact re-attention over the selected buckets' live slots
+        m_r, l_r, acc_r = kernel_ops.agg_refine_attention(
+            qg, cache.k, cache.v, cnt, top_idx, use, scale=scale
+        )
+        # overflow centroids of the selected buckets (tokens beyond
+        # capacity): count-weighted aggregate, NEG-masked when none
+        cnt_sel = jnp.take_along_axis(cnt, top_idx, axis=1)     # [B,R]
+        over_cnt = (
+            jnp.maximum(cnt_sel - cap, 0).astype(jnp.float32)
+            * use.astype(jnp.float32)
+        )
+        idx4k = jnp.broadcast_to(
+            top_idx[:, :, None, None], top_idx.shape + (hkv, dk)
+        )
+        idx4v = jnp.broadcast_to(
+            top_idx[:, :, None, None], top_idx.shape + (hkv, dv)
+        )
+        ok_sel = jnp.take_along_axis(cache.over_k, idx4k, axis=1)
+        ov_sel = jnp.take_along_axis(cache.over_v, idx4v, axis=1)
         ov_logits = jnp.einsum(
-            "kgd,Rkd->kgR", qg, ok_b[top].astype(jnp.float32)
-        ) * scale + jnp.log(jnp.maximum(over_cnt, 1.0))[None, None]
+            "bkgd,brkd->bkgr", qg, ok_sel.astype(jnp.float32)
+        ) * scale + jnp.log(jnp.maximum(over_cnt, 1.0))[:, None, None]
         ov_logits = jnp.where(
-            (over_cnt > 0)[None, None], ov_logits, -jnp.inf
+            (over_cnt > 0)[:, None, None], ov_logits, NEG
         )
+        m_o = jnp.max(ov_logits, axis=-1)                       # [B,hkv,g]
+        w_o = jnp.where(
+            ov_logits > NEG / 2, jnp.exp(ov_logits - m_o[..., None]), 0.0
+        )
+        l_o = jnp.sum(w_o, axis=-1)
+        acc_o = jnp.einsum("bkgr,brkd->bkgd", w_o,
+                           ov_sel.astype(jnp.float32))
+        m_r, l_r, acc_r = kernel_ref.merge_partials(
+            m_r, l_r, acc_r, m_o, l_o, acc_o
+        )
+        refined_mask = jnp.zeros((b, kb), bool)
+        refined_mask = refined_mask.at[
+            jnp.arange(b)[:, None], top_idx
+        ].max(use)
+    else:
+        refined_mask = jnp.zeros((b, kb), bool)
+        m_r = jnp.full((b, hkv, group), NEG, jnp.float32)
+        l_r = jnp.zeros((b, hkv, group), jnp.float32)
+        acc_r = jnp.zeros((b, hkv, group, dv), jnp.float32)
 
-        # centroids for unrefined buckets, count-weighted
-        refined_mask = jnp.zeros((cache.n_buckets,), bool).at[top].set(True)
-        cent_live = (~refined_mask) & (cnt_b > 0)
-        cent_l = jnp.where(cent_live[None, None], cent_logits, -jnp.inf)
-        cent_l = cent_l + jnp.where(
-            cent_live, jnp.log(jnp.maximum(cnt_b.astype(jnp.float32), 1.0)),
-            0.0,
-        )[None, None]
-
-        # merged softmax over [refined slots ; overflow ; centroids]
-        flat_tok = tok_logits.reshape(hkv, group, -1)
-        all_l = jnp.concatenate([flat_tok, ov_logits, cent_l], axis=-1)
-        m = jnp.max(all_l, axis=-1, keepdims=True)
-        w = jnp.exp(all_l - m)
-        w = jnp.where(jnp.isfinite(all_l), w, 0.0)
-        denom = jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-30)
-        vals = jnp.concatenate(
-            [
-                v_sel.astype(jnp.float32).transpose(2, 0, 1, 3).reshape(
-                    hkv, -1, v_sel.shape[-1]
-                ),
-                ov_b[top].astype(jnp.float32).transpose(1, 0, 2),
-                mv_b.astype(jnp.float32).transpose(1, 0, 2),
-            ],
-            axis=1,
-        )                                              # [hkv, R*C+R+K, dv]
-        out = jnp.einsum("kgT,kTd->kgd", w / denom, vals)
-        return out.reshape(hq, -1)
-
-    return jax.vmap(per_seq)(
-        q, cache.k, cache.v, cache.mean_k, cache.mean_v, cache.over_k,
-        cache.over_v, cache.counts,
+    # stage 1: count-weighted centroids of the unrefined buckets
+    cent_logits = jnp.einsum(
+        "bkgd,bKkd->bkgK", qg, cache.mean_k.astype(jnp.float32)
+    ) * scale                                                   # [B,hkv,g,K]
+    cent_live = (~refined_mask) & (cnt > 0)                     # [B,K]
+    bias = jnp.log(jnp.maximum(cnt.astype(jnp.float32), 1.0))
+    cent_l = jnp.where(
+        cent_live[:, None, None, :],
+        cent_logits + bias[:, None, None, :], NEG,
     )
+    m_c = jnp.max(cent_l, axis=-1)
+    w_c = jnp.where(
+        cent_l > NEG / 2, jnp.exp(cent_l - m_c[..., None]), 0.0
+    )
+    l_c = jnp.sum(w_c, axis=-1)
+    acc_c = jnp.einsum("bkgK,bKkd->bkgd", w_c,
+                       cache.mean_v.astype(jnp.float32))
+
+    _, l, acc = kernel_ref.merge_partials(m_r, l_r, acc_r, m_c, l_c, acc_c)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, dv)

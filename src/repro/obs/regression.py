@@ -98,6 +98,19 @@ DEFAULT_SPECS: tuple[MetricSpec, ...] = (
                "higher", tolerance=0.0, absolute=0.05),
     MetricSpec("error_bounds.serving.latency_win",
                "higher", tolerance=0.35, absolute=0.5),
+    # Decode-engine contract (benchmarks/decode_bench.py): full-refine
+    # aggregated decode bit-matches exact attention (boolean — no band),
+    # throughput stays put, and the stage-1 logit divergence from exact
+    # must not grow (it is a deterministic function of the aggregation,
+    # so only a tiny absolute band for float noise).
+    MetricSpec("decode_bench.exact_match_at_full_refine",
+               "higher", tolerance=0.0),
+    MetricSpec("decode_bench.levels.p0.tokens_per_s",
+               "higher", tolerance=0.35, absolute=2.0),
+    MetricSpec("decode_bench.levels.p100.tokens_per_s",
+               "higher", tolerance=0.35, absolute=2.0),
+    MetricSpec("decode_bench.levels.p0.kl_vs_exact",
+               "lower", tolerance=0.05, absolute=1e-4),
 )
 
 

@@ -51,9 +51,10 @@ batch records a span tree (batcher wait -> grant -> cache lookup -> per-shard
 map -> refine); see ``repro.obs`` and ``examples/observe_serving.py``.
 
 Workloads implement the small ``Servable`` protocol (repro.serve.request);
-``repro.apps.knn.KNNServable`` and ``repro.apps.cf.CFServable`` are the two
-shipped instances, and aggregated-KV decode steps fit the same contract
-(the bucketed KV cache is the "dataset shard", a decode step the query).
+``repro.apps.knn.KNNServable``, ``repro.apps.cf.CFServable``, and
+``repro.serve.lm.LMServable`` (aggregated-KV LM decoding: the bucketed KV
+cache is the "dataset shard", a decode step the query, and the granted
+eps is the per-step ``refine_frac``) are the shipped instances.
 
 Robustness: ``repro.serve.frontdoor.FrontDoor`` puts admission control in
 front of this loop — per-tenant token-bucket quotas, a bounded admission

@@ -1,0 +1,356 @@
+"""Aggregated-KV decode engine: slot-based continuous batching over the
+paper's two-stage attention.
+
+``DecodeEngine`` owns one fixed ``[max_slots]`` decode batch of per-layer
+``AggKVCache``/``BucketMajorKVCache`` state and exposes the three-verb
+serving API:
+
+  * ``prefill(tokens)`` — run the prompt through the model at
+    ``refine_frac=1.0`` (prefill is always *exact*: the approximation is a
+    decode-time knob, never baked into the cache) and return a batch-1
+    ``Prefix``;
+  * ``insert(prefix, slot)`` — splice the prefix's cache state into a free
+    slot of the engine batch (one ``dynamic_update_slice`` per leaf — the
+    per-slot state never round-trips through host memory);
+  * ``generate_step(refine_frac)`` — one fused decode step for ALL live
+    slots at a *per-step* refine fraction: the decode-side eps, granted
+    per token by the deadline controller, mapped onto
+    ``ceil(refine_frac * K)`` exactly re-attended buckets.
+
+Per-token decode cost is O(K + eps*S) per slot instead of O(S) — the
+paper's skip, with eps now a serving-time control signal.
+
+Failure domains: buckets stripe over shards (``BucketShardPlan``);
+``kill_shard`` zeroes the dead buckets' counts so they stop contributing
+(the empty-bucket masking path), and the mask is re-applied after every
+state mutation while shards stay dead — degraded, never NaN, never
+resurrected by accident.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_lib
+from repro.models.aggregated_kv import (
+    AggKVCache, BucketMajorKVCache, refine_count,
+)
+from repro.obs.metrics import MetricsRegistry, default_registry
+from repro.obs.trace import current_tracer
+from repro.serve.lm.sharded import BucketShardPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class Prefix:
+    """Prefilled per-sequence decode state, ready to insert into a slot."""
+
+    caches: dict            # batch-1 decode-cache pytree
+    next_token: int         # argmax of the prompt's final-position logits
+    logits: np.ndarray      # [vocab_padded] float32 final-position logits
+    length: int             # prompt tokens consumed (next insert position)
+
+
+@jax.jit
+def _insert_jit(state: dict, prefix: dict, slot: jax.Array) -> dict:
+    """Splice a batch-1 prefix pytree into ``slot`` of the engine state.
+
+    Leaf placement by shape: batch-leading leaves ([B, ...] vs [1, ...])
+    update at ``slot``; scanned-unit leaves ([n_units, B, ...] vs
+    [n_units, 1, ...]) update at ``(:, slot)``; shape-identical leaves
+    (LSH projections drawn from the same key — batch-independent) are
+    taken from the prefix wholesale.
+    """
+
+    def put(ds, pf):
+        if ds.shape == pf.shape:
+            return pf.astype(ds.dtype)
+        if (
+            ds.ndim == pf.ndim and pf.shape[0] == 1
+            and ds.shape[1:] == pf.shape[1:]
+        ):
+            return jax.lax.dynamic_update_slice(
+                ds, pf.astype(ds.dtype), (slot,) + (0,) * (ds.ndim - 1)
+            )
+        if (
+            ds.ndim == pf.ndim and ds.shape[0] == pf.shape[0]
+            and pf.shape[1] == 1 and ds.shape[2:] == pf.shape[2:]
+        ):
+            return jax.lax.dynamic_update_slice(
+                ds, pf.astype(ds.dtype), (0, slot) + (0,) * (ds.ndim - 2)
+            )
+        raise ValueError(
+            f"cannot place prefix leaf {pf.shape} into state leaf {ds.shape}"
+        )
+
+    return jax.tree_util.tree_map(put, state, prefix)
+
+
+class DecodeEngine:
+    """Slot-based continuous-batching decode over aggregated KV caches."""
+
+    def __init__(
+        self,
+        params: dict,
+        cfg,
+        *,
+        max_slots: int,
+        s_max: int,
+        key: jax.Array | None = None,
+        n_shards: int = 1,
+        registry: MetricsRegistry | None = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        if not cfg.agg_kv:
+            raise ValueError(
+                "DecodeEngine requires cfg.agg_kv=True (aggregated caches)"
+            )
+        if max_slots < 1:
+            raise ValueError("need at least one slot")
+        self.params = params
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.s_max = s_max
+        self.clock = clock
+        key = key if key is not None else jax.random.PRNGKey(0)
+        # Same key for both builds: the LSH draws fold in only layer
+        # indices, so the batch-1 prefix caches and the engine batch share
+        # identical projections — insert() depends on this.
+        self.state = model_lib.init_caches(
+            key, cfg, batch=max_slots, s_max=s_max
+        )
+        self._prefix_template = model_lib.init_caches(
+            key, cfg, batch=1, s_max=s_max
+        )
+        self.n_buckets = max(1, s_max // cfg.agg_compression)
+        self.shard_plan = BucketShardPlan(self.n_buckets, n_shards)
+        self._dead: set[int] = set()
+        self._keep_mask = jnp.ones((self.n_buckets,), bool)
+
+        self._live = np.zeros(max_slots, dtype=bool)
+        self.pos = jnp.zeros((max_slots,), jnp.int32)
+        self.last_token = jnp.zeros((max_slots,), jnp.int32)
+
+        self.registry = registry if registry is not None \
+            else default_registry()
+        self._m_tokens = self.registry.counter(
+            "lm_decode_tokens_total", "tokens emitted across live slots"
+        )
+        self._m_prefills = self.registry.counter(
+            "lm_prefill_total", "prompts prefilled"
+        )
+        self._m_step_s = self.registry.reservoir(
+            "lm_decode_step_latency_s", "wall seconds per fused decode step"
+        )
+        self._m_rf = self.registry.gauge(
+            "lm_decode_refine_frac", "refine_frac of the latest decode step"
+        )
+
+        self._prefill_fns: dict[int, Any] = {}
+        self._step_fns: dict[float, Any] = {}
+
+    # ------------------------------------------------------------------
+    # slots
+    # ------------------------------------------------------------------
+    @property
+    def live_slots(self) -> list[int]:
+        return [i for i in range(self.max_slots) if self._live[i]]
+
+    @property
+    def free_slots(self) -> list[int]:
+        return [i for i in range(self.max_slots) if not self._live[i]]
+
+    def free(self, slot: int) -> None:
+        self._live[slot] = False
+
+    def free_all(self) -> None:
+        self._live[:] = False
+
+    # ------------------------------------------------------------------
+    # failure domains
+    # ------------------------------------------------------------------
+    @property
+    def dead_shards(self) -> frozenset[int]:
+        return frozenset(self._dead)
+
+    def kill_shard(self, shard: int) -> None:
+        """Drop a failure domain: its buckets' counts go to zero (they stop
+        contributing centroids and stop being refinable) on the whole
+        engine batch, and stay masked until revival."""
+        if not 0 <= shard < self.shard_plan.n_shards:
+            raise ValueError(f"shard {shard} out of range")
+        self._dead.add(shard)
+        self._keep_mask = jnp.asarray(
+            self.shard_plan.keep_mask(self._dead)
+        )
+        self.state = self._apply_dead_mask(self.state)
+
+    def revive_shards(self) -> None:
+        """Clear the dead set.  Zeroed counts stay zero — aggregated data
+        lost to the dead shards returns only via re-prefill."""
+        self._dead.clear()
+        self._keep_mask = jnp.ones((self.n_buckets,), bool)
+
+    def _apply_dead_mask(self, caches: dict) -> dict:
+        if not self._dead:
+            return caches
+        keep = self._keep_mask
+
+        def fix(c):
+            if isinstance(c, (AggKVCache, BucketMajorKVCache)):
+                return dataclasses.replace(
+                    c, counts=jnp.where(keep, c.counts, 0)
+                )
+            return c
+
+        return jax.tree_util.tree_map(
+            fix, caches,
+            is_leaf=lambda x: isinstance(
+                x, (AggKVCache, BucketMajorKVCache)
+            ),
+        )
+
+    # ------------------------------------------------------------------
+    # prefill
+    # ------------------------------------------------------------------
+    def _prefill_fn(self, length: int):
+        fn = self._prefill_fns.get(length)
+        if fn is not None:
+            return fn
+        cfg1 = self.cfg.with_(agg_refine_frac=1.0)
+
+        @jax.jit
+        def run(params, caches, tokens):
+            def body(carry, tok):
+                caches, pos = carry
+                _, caches = model_lib.serve_step(
+                    params, caches, tok[None, None], pos[None], cfg1
+                )
+                return (caches, pos + 1), None
+
+            (caches, pos), _ = jax.lax.scan(
+                body, (caches, jnp.int32(0)), tokens[:-1]
+            )
+            logits, caches = model_lib.serve_step(
+                params, caches, tokens[-1][None, None], pos[None], cfg1
+            )
+            return caches, logits[0].astype(jnp.float32)
+
+        self._prefill_fns[length] = run
+        return run
+
+    def prefill(self, tokens) -> Prefix:
+        """Run a prompt through the model at exact attention; batch-1."""
+        tokens = jnp.asarray(tokens, jnp.int32).reshape(-1)
+        length = int(tokens.shape[0])
+        if not 1 <= length < self.s_max:
+            raise ValueError(
+                f"prompt length {length} outside [1, {self.s_max})"
+            )
+        tracer = current_tracer()
+        with tracer.span("decode.prefill", length=length):
+            caches, logits = self._prefill_fn(length)(
+                self.params, self._prefix_template, tokens
+            )
+            logits = np.asarray(jax.block_until_ready(logits))
+        self._m_prefills.inc()
+        return Prefix(
+            caches=caches,
+            next_token=int(np.argmax(logits)),
+            logits=logits,
+            length=length,
+        )
+
+    # ------------------------------------------------------------------
+    # insert
+    # ------------------------------------------------------------------
+    def insert(self, prefix: Prefix, slot: int) -> None:
+        """Admit a prefilled sequence into a slot of the decode batch."""
+        if not 0 <= slot < self.max_slots:
+            raise ValueError(f"slot {slot} out of range")
+        if self._live[slot]:
+            raise ValueError(f"slot {slot} is live; free() it first")
+        self.state = _insert_jit(
+            self.state, prefix.caches, jnp.int32(slot)
+        )
+        self.state = self._apply_dead_mask(self.state)
+        self.pos = self.pos.at[slot].set(prefix.length)
+        self.last_token = self.last_token.at[slot].set(prefix.next_token)
+        self._live[slot] = True
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def _step_fn(self, refine_frac: float):
+        fn = self._step_fns.get(refine_frac)
+        if fn is not None:
+            return fn
+        cfg_rf = self.cfg.with_(agg_refine_frac=refine_frac)
+
+        @jax.jit
+        def run(params, caches, last_token, pos, live):
+            logits, caches = model_lib.serve_step(
+                params, caches, last_token[:, None], pos, cfg_rf
+            )
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            nxt = jnp.where(live, nxt, last_token)
+            new_pos = jnp.where(live, pos + 1, pos)
+            return caches, logits.astype(jnp.float32), nxt, new_pos
+
+        self._step_fns[refine_frac] = run
+        return run
+
+    def generate_step(
+        self, refine_frac: float
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """One fused decode step for every live slot.
+
+        Returns ``(tokens [max_slots], logits [max_slots, vocab_padded])``
+        — dead slots carry their stale token and garbage logits; callers
+        index by the slots they own.
+        """
+        if not self._live.any():
+            raise RuntimeError("generate_step with no live slots")
+        pos_np = np.asarray(self.pos)
+        if np.any(pos_np[self._live] >= self.s_max):
+            raise RuntimeError("a live slot exhausted s_max")
+        n_live = int(self._live.sum())
+        tracer = current_tracer()
+        t0 = self.clock()
+        with tracer.span(
+            "decode.step", refine_frac=refine_frac, live=n_live
+        ):
+            live = jnp.asarray(self._live)
+            state, logits, nxt, new_pos = self._step_fn(refine_frac)(
+                self.params, self.state, self.last_token, self.pos, live
+            )
+            logits = jax.block_until_ready(logits)
+        self.state = self._apply_dead_mask(state)
+        self.last_token = nxt
+        self.pos = new_pos
+        self._m_tokens.inc(n_live)
+        self._m_step_s.observe(self.clock() - t0)
+        self._m_rf.set(refine_frac)
+        return np.asarray(nxt), np.asarray(logits)
+
+    # ------------------------------------------------------------------
+    # modeled cost
+    # ------------------------------------------------------------------
+    def step_bytes(self, refine_frac: float) -> int:
+        """Modeled HBM bytes of one fused decode step's attention reads:
+        K centroid K/V pairs (fp32) plus the refined buckets' exact slots
+        — the O(K + eps*S) skip, metered the same way the offline
+        benchmarks meter shuffle bytes."""
+        cfg = self.cfg
+        k = self.n_buckets
+        r = refine_count(refine_frac, k)
+        hkv = max(1, cfg.n_kv_heads)
+        hd = cfg.head_dim
+        item = jnp.dtype(cfg.dtype).itemsize
+        cent = 2 * k * hkv * hd * 4
+        refined = 2 * r * 2 * cfg.agg_compression * hkv * hd * item
+        return int(cfg.n_layers * self.max_slots * (cent + refined))

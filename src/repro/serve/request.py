@@ -50,6 +50,24 @@ the two off explicitly:
 ``max_error`` never causes a drop or a refusal; empty/unknown buckets
 report infinite uncertainty, so an unknown answer can never satisfy an
 accuracy SLO by accident.
+
+The token-streaming answer shape (LM generation, ``serve/lm``)
+--------------------------------------------------------------
+Generation rides the same contract with a structured per-request answer:
+``stage1`` / ``refined`` are each ``{"tokens": [T] int32, "logits":
+[T, V] float32}`` — the greedy token sequence and the pre-argmax logits
+at every emitted position (T = ``max_new_tokens``).  Token 0 of both
+stages comes from the same *exact* prefill, so it always agrees; the
+stages diverge only in decode, where stage 1 runs at ``refine_frac=0``
+(pure centroid attention) and the refined answer at the granted
+``refine_frac = refine_budget / K``.  ``accuracy_proxy`` is the fraction
+of emitted positions whose greedy token differs between the stages, and
+``on_stage1`` fires with the full stage-1 token block as soon as it is
+ready — the streaming hook: a caller renders approximate tokens
+immediately and patches in the refined sequence when (if) it lands.
+``partial_shards`` means dead bucket stripes were masked out of the
+aggregate (see ``serve/lm/sharded.py``): shorter memory, still an
+answer.
 """
 from __future__ import annotations
 

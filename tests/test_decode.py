@@ -1,0 +1,410 @@
+"""Decode-path coverage: aggregated-KV decode exactness, insert/prefill
+round-trip, decode-side kernel parity, empty-bucket hazards, and the
+LMServable anytime contract end to end through Server/FrontDoor."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.budget import BudgetPolicy
+from repro.kernels import ops as kernel_ops
+from repro.kernels.ref import NEG
+from repro.kernels.topk_stream import BIG
+from repro.models import aggregated_kv as akv
+from repro.models import init_caches, init_params, serve_step
+from repro.serve.frontdoor import FrontDoor, LoadShedLadder
+from repro.serve.lm import DecodeEngine, LMServable, lm_pad_sizes
+from repro.serve.lm.sharded import BucketShardPlan
+from repro.serve.scheduler import ContinuousBatcher
+from repro.serve.server import Server
+
+
+def _exact_attention(q, ks, vs, scale):
+    """Naive GQA softmax attention: q [H,dk], ks/vs [S,Hkv,d] -> [H,dv]."""
+    hq = q.shape[0]
+    hkv = ks.shape[1]
+    group = hq // hkv
+    out = []
+    for h in range(hq):
+        kv = h // group
+        logits = ks[:, kv].astype(jnp.float32) @ q[h].astype(jnp.float32)
+        w = jax.nn.softmax(logits * scale)
+        out.append(w @ vs[:, kv].astype(jnp.float32))
+    return jnp.stack(out)
+
+
+def _filled_flat_cache(key, *, batch=2, s=10, s_max=16, n_kv=2, dk=8,
+                       compression=2):
+    cache = akv.init_cache(
+        key, batch=batch, s_max=s_max, n_kv=n_kv, dk=dk,
+        compression=compression, dtype=jnp.float32,
+    )
+    ks = jax.random.normal(jax.random.fold_in(key, 1), (batch, s, n_kv, dk))
+    vs = jax.random.normal(jax.random.fold_in(key, 2), (batch, s, n_kv, dk))
+    for t in range(s):
+        cache = akv.insert(
+            cache, ks[:, t], vs[:, t], jnp.full((batch,), t, jnp.int32)
+        )
+    return cache, ks, vs
+
+
+def test_decode_attend_full_refine_is_exact():
+    """refine_frac=1.0: every non-empty bucket re-attended exactly ==
+    plain softmax attention over all inserted tokens."""
+    key = jax.random.PRNGKey(0)
+    cache, ks, vs = _filled_flat_cache(key)
+    b, s = ks.shape[0], ks.shape[1]
+    hq, dk = 4, ks.shape[-1]
+    scale = 1.0 / math.sqrt(dk)
+    q = jax.random.normal(jax.random.fold_in(key, 3), (b, hq, dk))
+    got = akv.decode_attend(
+        q, cache, jnp.full((b,), s - 1, jnp.int32),
+        refine_frac=1.0, scale=scale,
+    )
+    for i in range(b):
+        want = _exact_attention(q[i], ks[i], vs[i], scale)
+        np.testing.assert_allclose(
+            np.asarray(got[i]), np.asarray(want), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_refine_frac_zero_is_pure_stage1():
+    """refine_frac=0 is a real operating point: count-weighted centroid
+    attention only, nothing re-attended, no NaN."""
+    key = jax.random.PRNGKey(1)
+    cache, ks, vs = _filled_flat_cache(key)
+    b, s = ks.shape[0], ks.shape[1]
+    hq, dk = 4, ks.shape[-1]
+    scale = 1.0 / math.sqrt(dk)
+    q = jax.random.normal(jax.random.fold_in(key, 3), (b, hq, dk))
+    got = akv.decode_attend(
+        q, cache, jnp.full((b,), s - 1, jnp.int32),
+        refine_frac=0.0, scale=scale,
+    )
+    assert bool(jnp.all(jnp.isfinite(got)))
+    # manual stage-1 oracle: softmax over q.mean_k + log(count), counts>0
+    group = hq // cache.mean_k.shape[2]
+    for i in range(b):
+        for h in range(hq):
+            kv = h // group
+            cnt = cache.counts[i].astype(jnp.float32)
+            logits = (
+                cache.mean_k[i, :, kv] @ q[i, h].astype(jnp.float32)
+            ) * scale + jnp.log(jnp.maximum(cnt, 1.0))
+            logits = jnp.where(cnt > 0, logits, -jnp.inf)
+            w = jax.nn.softmax(logits)
+            w = jnp.where(cnt > 0, w, 0.0)
+            want = w @ cache.mean_v[i, :, kv]
+            np.testing.assert_allclose(
+                np.asarray(got[i, h]), np.asarray(want),
+                rtol=1e-5, atol=1e-5,
+            )
+
+
+def test_empty_buckets_never_nan():
+    """Satellite pin: counts==0 buckets are masked (-inf logit), never a
+    NaN from log(0) or a winning 0-mean centroid — including the
+    all-empty cache, in both layouts, at every refine_frac."""
+    key = jax.random.PRNGKey(2)
+    flat = akv.init_cache(
+        key, batch=1, s_max=16, n_kv=2, dk=8, compression=2,
+        dtype=jnp.float32,
+    )
+    bm = akv.init_bucket_major(
+        key, batch=1, s_max=16, n_kv=2, dk=8, compression=2,
+        dtype=jnp.float32,
+    )
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, 4, 8))
+    for rf in (0.0, 0.5, 1.0):
+        a = akv.decode_attend(
+            q, flat, jnp.zeros((1,), jnp.int32), refine_frac=rf, scale=0.3
+        )
+        c = akv.decode_attend_bucket_major(q, bm, refine_frac=rf, scale=0.3)
+        # all-empty cache: exact zeros, not NaN
+        np.testing.assert_array_equal(np.asarray(a), 0.0)
+        np.testing.assert_array_equal(np.asarray(c), 0.0)
+    # one token inserted: empty buckets must not dilute the answer
+    k1 = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 8))
+    v1 = jax.random.normal(jax.random.fold_in(key, 3), (1, 2, 8))
+    flat = akv.insert(flat, k1, v1, jnp.zeros((1,), jnp.int32))
+    bm = akv.insert_bucket_major(bm, k1, v1)
+    for rf in (0.0, 1.0):
+        a = akv.decode_attend(
+            q, flat, jnp.zeros((1,), jnp.int32), refine_frac=rf, scale=0.3
+        )
+        c = akv.decode_attend_bucket_major(
+            q, bm, refine_frac=rf, scale=0.3
+        )
+        # softmax over exactly one live item == that item's value
+        want = _exact_attention(q[0], k1[0][None], v1[0][None], 0.3)
+        np.testing.assert_allclose(np.asarray(a[0]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(c[0]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_insert_prefill_roundtrip():
+    """Token-by-token insert == bulk prefill: identical bucketing and
+    identical running aggregates (the §III-B generation equivalence)."""
+    key = jax.random.PRNGKey(3)
+    base = akv.init_cache(
+        key, batch=2, s_max=16, n_kv=2, dk=8, compression=2,
+        dtype=jnp.float32,
+    )
+    ks = jax.random.normal(jax.random.fold_in(key, 1), (2, 10, 2, 8))
+    vs = jax.random.normal(jax.random.fold_in(key, 2), (2, 10, 2, 8))
+    one = base
+    for t in range(10):
+        one = akv.insert(
+            one, ks[:, t], vs[:, t], jnp.full((2,), t, jnp.int32)
+        )
+    bulk = akv.prefill(base, ks, vs)
+    np.testing.assert_array_equal(
+        np.asarray(one.bucket_of[:, :10]), np.asarray(bulk.bucket_of[:, :10])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(one.counts), np.asarray(bulk.counts)
+    )
+    np.testing.assert_allclose(
+        np.asarray(one.mean_k), np.asarray(bulk.mean_k), rtol=1e-5,
+        atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        np.asarray(one.mean_v), np.asarray(bulk.mean_v), rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_bucket_major_matches_flat_cache_level():
+    """Same LSH family, same inserts: the two layouts agree at every
+    refine_frac (no overflow)."""
+    key = jax.random.PRNGKey(4)
+    flat = akv.init_cache(
+        key, batch=2, s_max=16, n_kv=2, dk=8, compression=4,
+        dtype=jnp.float32,
+    )
+    bm = akv.init_bucket_major(
+        key, batch=2, s_max=16, n_kv=2, dk=8, compression=4,
+        dtype=jnp.float32,
+    )
+    ks = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, 2, 8))
+    vs = jax.random.normal(jax.random.fold_in(key, 2), (2, 8, 2, 8))
+    for t in range(8):
+        pos = jnp.full((2,), t, jnp.int32)
+        flat = akv.insert(flat, ks[:, t], vs[:, t], pos)
+        bm = akv.insert_bucket_major(bm, ks[:, t], vs[:, t])
+    q = jax.random.normal(jax.random.fold_in(key, 3), (2, 4, 8))
+    for rf in (0.0, 0.5, 1.0):
+        a = akv.decode_attend(
+            q, flat, jnp.full((2,), 7, jnp.int32), refine_frac=rf,
+            scale=0.35,
+        )
+        c = akv.decode_attend_bucket_major(
+            q, bm, refine_frac=rf, scale=0.35
+        )
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode-side kernel parity (ref vs Pallas body under the interpreter)
+# ---------------------------------------------------------------------------
+
+def test_distance_topk_dot_mode_parity():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(5, 7)), jnp.float32)
+    p = jnp.asarray(rng.normal(size=(33, 7)), jnp.float32)
+    lab = jnp.arange(33)
+    valid = jnp.asarray(rng.integers(0, 2, size=(33,)), jnp.int32)
+    d_ref, l_ref = kernel_ops.distance_topk(
+        q, p, lab, valid, k=4, metric="dot", force="ref"
+    )
+    d_pl, l_pl = kernel_ops.distance_topk(
+        q, p, lab, valid, k=4, metric="dot", force="pallas_interpret"
+    )
+    np.testing.assert_allclose(np.asarray(d_ref), np.asarray(d_pl),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(l_ref), np.asarray(l_pl))
+    # brute-force: k most-correlated valid points, scores negated
+    scores = -(np.asarray(q) @ np.asarray(p).T)
+    scores[:, np.asarray(valid) == 0] = BIG
+    want = np.sort(scores, axis=1)[:, :4]
+    np.testing.assert_allclose(
+        np.sort(np.asarray(d_ref), axis=1), want, rtol=1e-4, atol=1e-4
+    )
+
+
+def test_agg_refine_attention_kernel_parity():
+    rng = np.random.default_rng(1)
+    bsz, kb, cap, hkv, g, dk, dv, r = 3, 8, 4, 2, 2, 16, 16, 3
+    q = jnp.asarray(rng.normal(size=(bsz, hkv, g, dk)), jnp.float32)
+    ks = jnp.asarray(rng.normal(size=(bsz, kb, cap, hkv, dk)), jnp.float32)
+    vs = jnp.asarray(rng.normal(size=(bsz, kb, cap, hkv, dv)), jnp.float32)
+    counts = jnp.asarray(rng.integers(0, cap + 3, size=(bsz, kb)), jnp.int32)
+    top_idx = jnp.asarray(rng.integers(0, kb, size=(bsz, r)), jnp.int32)
+    use = jnp.asarray(rng.integers(0, 2, size=(bsz, r)), jnp.int32)
+    o_ref = kernel_ops.agg_refine_attention(
+        q, ks, vs, counts, top_idx, use, scale=0.25, force="ref"
+    )
+    o_pl = kernel_ops.agg_refine_attention(
+        q, ks, vs, counts, top_idx, use, scale=0.25,
+        force="pallas_interpret",
+    )
+    for a, b in zip(o_ref, o_pl):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    # fully masked selection: the NEG/0/0 empty partial, never NaN
+    m, l, acc = kernel_ops.agg_refine_attention(
+        q, ks, vs, counts, top_idx, jnp.zeros((bsz, r), jnp.int32),
+        scale=0.25, force="pallas_interpret",
+    )
+    assert float(jnp.max(m)) <= NEG / 2
+    np.testing.assert_array_equal(np.asarray(l), 0.0)
+    np.testing.assert_array_equal(np.asarray(acc), 0.0)
+
+
+def test_bucket_shard_plan():
+    plan = BucketShardPlan(n_buckets=10, n_shards=3)
+    assert list(plan.buckets_of(0)) == [0, 3, 6, 9]
+    keep = plan.keep_mask({0})
+    assert keep.sum() == 6
+    assert not keep[0] and not keep[9] and keep[1]
+
+
+# ---------------------------------------------------------------------------
+# engine / servable / server (e2e anytime contract)
+# ---------------------------------------------------------------------------
+
+def _tiny_engine(max_slots=2, s_max=16):
+    cfg = get_config("qwen3-8b", smoke=True).with_(
+        agg_kv=True, agg_layout="bucket_major", agg_compression=4
+    )
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    return DecodeEngine(
+        params, cfg, max_slots=max_slots, s_max=s_max,
+        key=jax.random.PRNGKey(7), n_shards=2,
+    )
+
+
+def test_engine_insert_matches_batch1_decode():
+    """prefill -> insert(slot) -> generate_step(rf=1.0) reproduces a
+    from-scratch batch-1 serve_step loop bit-for-bit (same LSH key), and
+    refine_frac=1.0 decode is bit-compatible with exact attention (the
+    agg invariant is pinned at the model layer by test_models)."""
+    eng = _tiny_engine()
+    cfg1 = eng.cfg.with_(agg_refine_frac=1.0)
+    prompt = np.asarray([5, 9, 2, 17, 3], np.int32)
+    pf = eng.prefill(prompt)
+    eng.insert(pf, 1)                       # non-trivial slot
+    got_tokens = [pf.next_token]
+    got_logits = []
+    for _ in range(3):
+        nxt, lg = eng.generate_step(1.0)
+        got_tokens.append(int(nxt[1]))
+        got_logits.append(np.asarray(lg[1]))
+
+    # reference: straight-line batch-1 decode with the engine's cache key
+    caches = init_caches(
+        jax.random.PRNGKey(7), cfg1, batch=1, s_max=eng.s_max
+    )
+    pos = jnp.zeros((1,), jnp.int32)
+    tok = None
+    want_tokens = []
+    want_logits = []
+    feed = list(prompt)
+    for t in range(len(prompt) + 3):
+        cur = jnp.asarray(
+            [[feed[t] if t < len(feed) else tok]], jnp.int32
+        )
+        logits, caches = serve_step(eng.params, caches, cur, pos, cfg1)
+        pos = pos + 1
+        tok = int(jnp.argmax(logits[0]))
+        if t >= len(prompt) - 1:
+            want_tokens.append(tok)
+            want_logits.append(np.asarray(logits[0], np.float32))
+    assert got_tokens == want_tokens
+    for a, b in zip(got_logits, want_logits[1:]):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_lmservable_anytime_contract_through_server():
+    """A generation request through Server: stage-1 answer always, refined
+    when granted, token 0 shared (exact prefill), accuracy proxy and
+    partial_shards flow through the Response."""
+    eng = _tiny_engine()
+    srv = LMServable(eng, prompt_len=4, max_new_tokens=3)
+    server = Server(
+        [srv],
+        policy=BudgetPolicy(eps_max=1.0),
+        batcher=ContinuousBatcher(
+            max_batch=2, pad_sizes=lm_pad_sizes(eng.max_slots),
+            slo_aware=False,
+        ),
+    )
+    server.calibrate("lm")
+    rid = server.submit(
+        "lm", (np.asarray([1, 2, 3, 4], np.int32),), deadline_s=30.0
+    )
+    # The tiny smoke model's stage-2 delta can sit inside probe noise, in
+    # which case the controller refuses to grant off an unobserved cost
+    # (escalate -> re-execution at full eps): one rid, possibly two
+    # responses.  Either way the anytime contract holds — stage-1 answer
+    # on every response, a refined answer on the terminal one.
+    resps = server.drain()
+    assert resps and all(r.rid == rid for r in resps)
+    assert all(r.stage1 is not None for r in resps)
+    final = resps[-1]
+    assert final.refined is not None
+    assert final.eps_granted > 0.0 or final.reexecuted
+    s1, ref = final.stage1["tokens"], final.refined["tokens"]
+    assert s1.shape == (3,) and ref.shape == (3,)
+    assert s1[0] == ref[0]                     # exact prefill shared
+    assert final.accuracy_proxy is not None
+    assert final.partial_shards == ()
+
+    # shard death: answers degrade to partial_shards, never error
+    eng.kill_shard(0)
+    server.submit(
+        "lm", (np.asarray([4, 3, 2, 1], np.int32),), deadline_s=30.0
+    )
+    resps2 = server.drain()
+    assert resps2
+    for r in resps2:
+        assert r.partial_shards == (0,)
+        assert r.stage1 is not None
+        assert np.isfinite(r.stage1["logits"]).all()
+
+
+def test_lm_frontdoor_shed_coarsens_refine_frac():
+    """Load-shed ladder rungs scale eps_max fleet-wide, which IS the
+    decode refine_frac ceiling — and shed requests still get answers."""
+    eng = _tiny_engine()
+    srv = LMServable(eng, prompt_len=4, max_new_tokens=2)
+    server = Server(
+        [srv],
+        policy=BudgetPolicy(eps_max=1.0),
+        batcher=ContinuousBatcher(
+            max_batch=2, pad_sizes=lm_pad_sizes(eng.max_slots),
+            slo_aware=False,
+        ),
+    )
+    server.calibrate("lm")
+    door = FrontDoor(server, queue_limit=1, ladder=LoadShedLadder())
+    base_eps = server.controller.policy.eps_max
+    rids = [
+        door.submit(
+            "lm", (np.asarray([i, 2, 3, 4], np.int32),), deadline_s=30.0
+        )
+        for i in range(3)
+    ]
+    assert server.controller.policy.eps_max < base_eps  # rung engaged
+    for _ in range(8):
+        door.pump(max_batches=2)
+    answers = [door.result(r) for r in rids]
+    assert all(a is not None for a in answers)
+    # shed-before-reject: every admitted rid got a real anytime answer
+    from repro.serve.request import Response
+    got = [a for a in answers if isinstance(a, Response)]
+    assert got and all(a.stage1 is not None for a in got)
